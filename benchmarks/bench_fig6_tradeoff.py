@@ -1,0 +1,28 @@
+"""Paper Fig. 6 reproduction: GPU (K40) vs FPGA (DE5) trade-off analysis.
+
+Per layer x device: execution time, throughput (GFLOPS), power (W),
+energy (J), GFLOPS/W and GFLOP/J — the paper's four panels plus the
+performance-density discussion of §IV.B.  Claims C1-C5 are validated
+against the paper's reported values.
+"""
+from repro.core import tradeoff
+from repro.core.device_models import DE5, K40
+from repro.core.layer_model import alexnet_spec
+
+
+def run():
+    rows = []
+    net = alexnet_spec()
+    for r in tradeoff.analyze(net, [K40, DE5],
+                              batch=tradeoff.PAPER_WORKLOAD_IMAGES):
+        rows.append(("fig6_tradeoff", f"{r.device}:{r.layer}",
+                     r.time_s * 1e6,
+                     f"thr={r.throughput_gflops:.2f}GFLOPS "
+                     f"P={r.power_w:.2f}W E={r.energy_j:.3f}J "
+                     f"dens={r.gflops_per_watt:.2f}GFLOPS/W "
+                     f"ope={r.gflop_per_joule:.2f}GFLOP/J", ""))
+    claims = tradeoff.check_paper_claims()
+    for name, c in claims.items():
+        rows.append(("fig6_claims", name, 1.0 if c["ok"] else 0.0,
+                     str(c["value"])[:120], "PASS" if c["ok"] else "FAIL"))
+    return rows

@@ -1,0 +1,140 @@
+"""§Roofline reporter: turns dry-run JSON into the three-term roofline table.
+
+Per (arch x shape) on the single-pod 16x16 mesh:
+
+    compute term    = HLO_FLOPs  / (chips x 197 TFLOP/s)
+    memory term     = HLO_bytes  / (chips x 819 GB/s)
+    collective term = coll_bytes / (chips x 50 GB/s/link)
+
+HLO_FLOPs/bytes are **scan-corrected**: XLA's HloCostAnalysis counts while
+bodies once, so the raw compiled numbers are combined with the L0/L1
+calibration compiles (launch/dryrun.py --calibrate):
+
+    corrected = L0 + (n_layers / unit_len) x (L1 - L0)
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) for train; 2·N·D for
+prefill; 2·N per token for decode.  The useful-compute ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat/dispatch waste.
+"""
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import registry
+from repro.models.transformer import count_active_params
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # B/s / chip
+LINK_BW = 50e9            # B/s / link
+
+RESULTS = os.environ.get("DRYRUN_RESULTS",
+                         os.path.join(os.path.dirname(__file__), "..",
+                                      "dryrun_results.json"))
+
+
+def load(path: Optional[str] = None) -> List[Dict]:
+    with open(path or RESULTS) as f:
+        return json.load(f)
+
+
+def model_flops_per_device(arch_name: str, shape_name: str,
+                           n_chips: int) -> float:
+    arch = registry.get(arch_name)
+    cfg = arch.config
+    n_active = count_active_params(cfg)
+    shape = registry.SHAPES[shape_name]
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / n_chips
+
+
+def corrected_costs(records: List[Dict]) -> Dict:
+    """Combine full-compile records with calibration records."""
+    cal = {(r["arch"], r["shape"]): r for r in records
+           if r.get("calibration") and r.get("status") == "ok"}
+    out = {}
+    for r in records:
+        if r.get("calibration") or r.get("status") != "ok" \
+                or r.get("overrides"):
+            continue
+        key = (r["arch"], r["shape"], r["mesh"])
+        c = cal.get((r["arch"], r["shape"]))
+        rec = dict(r)
+        if c:
+            scale = c["n_layers"] / max(c["unit_len"], 1)
+            for k in ("flops_per_device", "bytes_per_device",
+                      "collective_bytes_per_device"):
+                body = c[f"L1_{k}"] - c[f"L0_{k}"]
+                rec[f"corrected_{k}"] = c[f"L0_{k}"] + scale * max(body, 0.0)
+            # collectives: the full compile sees loop-hoisted collectives the
+            # calibration can't attribute; keep the larger (conservative)
+            rec["corrected_collective_bytes_per_device"] = max(
+                rec["corrected_collective_bytes_per_device"],
+                r["collective_bytes_per_device"])
+        else:
+            for k in ("flops_per_device", "bytes_per_device",
+                      "collective_bytes_per_device"):
+                rec[f"corrected_{k}"] = r[k]
+            rec["uncalibrated"] = True
+        out[key] = rec
+    return out
+
+
+def roofline_rows(records: List[Dict], mesh: str = "pod") -> List[Dict]:
+    rows = []
+    for (arch, shape, m), r in sorted(corrected_costs(records).items()):
+        if m != mesh:
+            continue
+        # train cells run grad_accum sequential microbatch passes; the accum
+        # scan is one more while loop HloCostAnalysis counts once
+        accum = 1
+        if registry.SHAPES[shape].mode == "train":
+            accum = max(registry.get(arch).config.grad_accum, 1)
+        t_c = accum * r["corrected_flops_per_device"] / PEAK_FLOPS
+        t_m = accum * r["corrected_bytes_per_device"] / HBM_BW
+        t_x = accum * r["corrected_collective_bytes_per_device"] / LINK_BW
+        terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+        dom = max(terms, key=terms.get)
+        mf = model_flops_per_device(arch, shape, r["n_chips"])
+        t_total = max(terms.values())
+        rows.append({
+            "arch": arch, "shape": shape, "mesh": m,
+            "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+            "dominant": dom,
+            "model_flops_per_device": mf,
+            "hlo_flops_per_device": accum * r["corrected_flops_per_device"],
+            "useful_ratio": mf / max(
+                accum * r["corrected_flops_per_device"], 1.0),
+            # fraction of the compute roofline achieved if the step ran at
+            # the modeled time (MODEL_FLOPS / t_total / peak)
+            "roofline_fraction": mf / max(t_total, 1e-12) / PEAK_FLOPS,
+            "mem_gb_per_device": (r["memory"]["argument_bytes"]
+                                  + r["memory"]["temp_bytes"]) / 2**30,
+            "uncalibrated": r.get("uncalibrated", False),
+        })
+    return rows
+
+
+def run():
+    if not os.path.exists(RESULTS):
+        return [("roofline", "missing_dryrun_results", 0.0,
+                 f"run launch/dryrun.py first ({RESULTS})", "SKIP")]
+    rows = []
+    for r in roofline_rows(load()):
+        detail = (f"tc={r['t_compute_s']*1e3:.1f}ms "
+                  f"tm={r['t_memory_s']*1e3:.1f}ms "
+                  f"tx={r['t_collective_s']*1e3:.1f}ms "
+                  f"dom={r['dominant']} "
+                  f"useful={r['useful_ratio']:.2f} "
+                  f"roofline={r['roofline_fraction']:.2%}"
+                  + (" UNCAL" if r["uncalibrated"] else ""))
+        rows.append(("roofline", f"{r['arch']}:{r['shape']}",
+                     max(r["t_compute_s"], r["t_memory_s"],
+                         r["t_collective_s"]) * 1e3, detail, r["dominant"]))
+    return rows

@@ -1,0 +1,39 @@
+"""CNNLab DSE benchmark (paper §III.A processing flow).
+
+Measures the middleware itself: scheduling latency for AlexNet over the full
+engine registry, plan quality across objectives, and the latency/energy
+frontier the trade-off analysis exposes (the paper's 'design space is
+searched' step)."""
+import time
+
+from repro.core import engines, scheduler
+from repro.core.cost_model import OBJECTIVES
+from repro.core.layer_model import alexnet_full_spec
+
+
+def run():
+    rows = []
+    net = alexnet_full_spec()
+    t0 = time.perf_counter()
+    reps = 50
+    for _ in range(reps):
+        plan = scheduler.schedule(net, engines.ALL_ENGINES,
+                                  objective="latency")
+    dse_us = (time.perf_counter() - t0) / reps * 1e6
+    rows.append(("scheduler", "dse_latency_us", dse_us,
+                 f"{len(net)} layers x {len(engines.ALL_ENGINES)} engines", ""))
+
+    for obj in OBJECTIVES:
+        plan = scheduler.schedule(net, engines.ALL_ENGINES, objective=obj,
+                                  batch=109)
+        picks = ",".join(sorted({a.engine for a in plan.assignments}))
+        rows.append(("scheduler", f"plan_{obj}", plan.total_time * 1e3,
+                     f"ms total; E={plan.total_energy:.2f}J "
+                     f"peakP={plan.peak_power:.1f}W engines={picks}", ""))
+
+    # power-capped schedule (the paper's data-center power motivation)
+    plan = scheduler.schedule(net, engines.ALL_ENGINES, objective="latency",
+                              power_cap_w=50.0, batch=109)
+    rows.append(("scheduler", "plan_latency_cap50W", plan.total_time * 1e3,
+                 f"ms total; peakP={plan.peak_power:.1f}W", ""))
+    return rows

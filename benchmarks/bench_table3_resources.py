@@ -1,0 +1,47 @@
+"""Paper Table III analogue: per-module resource utilization.
+
+The FPGA table reported ALUTs/registers/DSPs/RAM blocks per accelerator
+module.  The TPU-kernel analogue is the static VMEM working set each Pallas
+kernel claims via its BlockSpecs, against the ~16 MiB VMEM budget — the same
+'does the module fit the fabric' question.  Also reports the paper's
+original Table III numbers through the DE5 device model (theoretical module
+peak = DSPs x 2 x clock).
+"""
+from repro.core.device_models import _DE5_MODULES, fpga_module_peak
+from repro.core.layer_model import alexnet_full_spec
+from repro.kernels.conv2d import conv2d_vmem_bytes
+
+_VMEM = 16 * 2 ** 20
+
+
+def run():
+    rows = []
+    # paper's module inventory (DE5)
+    for kind, (dsps, mhz) in _DE5_MODULES.items():
+        rows.append(("table3_fpga", f"de5_{kind}", fpga_module_peak(kind) / 1e9,
+                     f"DSPs={dsps} clock={mhz}MHz (theoretical GFLOPS)", ""))
+    # TPU kernel VMEM working sets
+    for spec in alexnet_full_spec():
+        if spec.kind == "conv":
+            h, w, c = spec.m_i
+            oc, ic, kh, kw = spec.m_k
+            b = conv2d_vmem_bytes(h + 2 * spec.padding, w + 2 * spec.padding,
+                                  ic, oc, kh, kw, spec.stride)
+            rows.append(("table3_vmem", f"conv_kernel_{spec.name}",
+                         b / 2 ** 20,
+                         f"MiB of 16 MiB VMEM ({100 * b / _VMEM:.0f}%)",
+                         "FITS" if b < _VMEM else "OVERFLOW"))
+    # matmul kernel default blocks: bm*bk + bk*bn + bm*bn fp32
+    bm, bn, bk = 256, 256, 512
+    b = 4 * (bm * bk + bk * bn + bm * bn)
+    rows.append(("table3_vmem", "matmul_kernel_blocks", b / 2 ** 20,
+                 f"bm={bm} bn={bn} bk={bk} ({100 * b / _VMEM:.0f}% VMEM)",
+                 "FITS" if b < _VMEM else "OVERFLOW"))
+    # flash attention: q/k/v blocks + acc + m/l
+    bq = bk_ = 512
+    d = 128
+    b = 4 * (bq * d + 2 * bk_ * d + bq * d + 2 * bq * 128) + 2 * bq * bk_ * 4
+    rows.append(("table3_vmem", "flash_attention_blocks", b / 2 ** 20,
+                 f"bq={bq} bk={bk_} d={d} ({100 * b / _VMEM:.0f}% VMEM)",
+                 "FITS" if b < _VMEM else "OVERFLOW"))
+    return rows

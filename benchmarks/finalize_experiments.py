@@ -1,0 +1,98 @@
+"""Renders the final EXPERIMENTS.md: fills the DRYRUN/ROOFLINE/PERF markers
+from dryrun_results.json (+ archived v0/v1 for the perf before/after log).
+
+    PYTHONPATH=src python -m benchmarks.finalize_experiments
+"""
+import json
+import os
+
+from .bench_roofline import roofline_rows
+from .report import dryrun_table, roofline_table, skips_table
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _load(name):
+    path = os.path.join(ROOT, name)
+    return json.load(open(path)) if os.path.exists(path) else []
+
+
+def _cell_mem(records, arch, shape, mesh="pod"):
+    for r in records:
+        if (r.get("arch"), r.get("shape"), r.get("mesh")) == (arch, shape,
+                                                              mesh) \
+                and r.get("status") == "ok" and not r.get("calibration"):
+            m = r["memory"]
+            return ((m["argument_bytes"] + m["temp_bytes"]) / 2**30,
+                    r["collective_bytes_per_device"] / 2**30,
+                    r["flops_per_device"] / 1e12)
+    return None
+
+
+def perf_history_table(cells):
+    v0, v1, v2 = _load("dryrun_results_v0.json"), \
+        _load("dryrun_results_v1.json"), _load("dryrun_results.json")
+    rows = ["| cell | metric | v0 (paper-faithful baseline) | v1 | v2 (final) |",
+            "|---|---|---|---|---|"]
+    for arch, shape in cells:
+        for vname, vals in (("HBM GB", 0), ("coll GB/dev", 1)):
+            a = _cell_mem(v0, arch, shape)
+            b = _cell_mem(v1, arch, shape)
+            c = _cell_mem(v2, arch, shape)
+            fmt = lambda x: f"{x[vals]:.1f}" if x else "—"
+            rows.append(f"| {arch}:{shape} | {vname} | {fmt(a)} | {fmt(b)} | "
+                        f"{fmt(c)} |")
+    return "\n".join(rows)
+
+
+def pick_hillclimb_cells(records):
+    rows = roofline_rows(records, mesh="pod")
+    if not rows:
+        return []
+    # decode cells are ~0% by construction (one token of useful FLOPs);
+    # pick the worst among compute-meaningful (train/prefill) cells
+    big = [r for r in rows if r["shape"] in ("train_4k", "prefill_32k")]
+    worst = min(big, key=lambda r: r["roofline_fraction"])
+    coll = max(big, key=lambda r: r["t_collective_s"]
+               / max(max(r["t_compute_s"], r["t_memory_s"]), 1e-12))
+    return [("worst roofline fraction (train/prefill)", worst),
+            ("most collective-bound", coll)]
+
+
+def main():
+    records = _load("dryrun_results.json")
+    exp_path = os.path.join(ROOT, "EXPERIMENTS.md")
+    text = open(exp_path).read()
+
+    dr = dryrun_table(records) + "\n\n### Skipped cells\n\n" + \
+        skips_table(records)
+    text = text.replace("<!-- DRYRUN_TABLE -->", dr)
+    text = text.replace("<!-- ROOFLINE_TABLE -->", roofline_table(records))
+
+    picks = pick_hillclimb_cells(records)
+    notes = ["**Hillclimb cell selection (per assignment):**", ""]
+    for label, r in picks:
+        notes.append(f"* {label}: **{r['arch']}:{r['shape']}** "
+                     f"(dominant={r['dominant']}, "
+                     f"roofline fraction {r['roofline_fraction']:.1%})")
+    notes.append("* most representative of the paper's technique: "
+                 "**mixtral_8x7b:train_4k** (the MoE layer is where the "
+                 "CNNLab engine/placement decision bites hardest)")
+    text = text.replace("<!-- ROOFLINE_NOTES -->", "\n".join(notes))
+
+    hist_cells = [("qwen2_1_5b", "train_4k"),
+                  ("granite_34b", "train_4k"),
+                  ("deepseek_coder_33b", "train_4k"),
+                  ("falcon_mamba_7b", "train_4k"),
+                  ("seamless_m4t_medium", "train_4k"),
+                  ("mixtral_8x7b", "train_4k"),
+                  ("llama32_vision_90b", "train_4k"),
+                  ("minicpm_2b", "decode_32k")]
+    text = text.replace("<!-- PERF_HISTORY -->",
+                        perf_history_table(hist_cells))
+    open(exp_path, "w").write(text)
+    print("EXPERIMENTS.md tables rendered")
+
+
+if __name__ == "__main__":
+    main()

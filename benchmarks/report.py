@@ -1,0 +1,85 @@
+"""Generates the EXPERIMENTS.md §Dry-run and §Roofline tables from
+dryrun_results.json.
+
+    PYTHONPATH=src python -m benchmarks.report [--results path]
+"""
+import argparse
+import json
+
+from .bench_roofline import corrected_costs, model_flops_per_device, \
+    roofline_rows, PEAK_FLOPS
+
+HBM_GB = 16.0
+
+
+def dryrun_table(records):
+    rows = ["| arch | shape | mesh | compile s | GFLOP/dev (raw) | HBM GB "
+            "(args+temp) | coll MB/dev | status |",
+            "|---|---|---|---|---|---|---|---|"]
+    full = [r for r in records if not r.get("calibration")
+            and not r.get("overrides")]
+    for r in sorted(full, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] == "skipped":
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "
+                        f"| — | — | ERROR |")
+            continue
+        m = r["memory"]
+        hbm = (m["argument_bytes"] + m["temp_bytes"]) / 2**30
+        flag = "ok" if hbm <= HBM_GB else "ok (CPU-f32-widen, see note)"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compile_s']:.0f} | {r['flops_per_device']/1e9:,.0f} | "
+            f"{hbm:.1f} | {r['collective_bytes_per_device']/2**20:,.0f} | "
+            f"{flag} |")
+    return "\n".join(rows)
+
+
+def skips_table(records):
+    rows = ["| arch | shape | reason |", "|---|---|---|"]
+    seen = set()
+    for r in records:
+        if r.get("status") == "skipped" and not r.get("calibration"):
+            key = (r["arch"], r["shape"])
+            if key in seen:
+                continue
+            seen.add(key)
+            rows.append(f"| {r['arch']} | {r['shape']} | "
+                        f"{r.get('reason', '')[:90]} |")
+    return "\n".join(rows)
+
+
+def roofline_table(records):
+    rows = ["| arch | shape | t_comp ms | t_mem ms | t_coll ms | dominant | "
+            "useful (6ND/HLO) | roofline frac |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in roofline_rows(records, mesh="pod"):
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:.1f} | "
+            f"{r['t_memory_s']*1e3:.1f} | {r['t_collective_s']*1e3:.1f} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.1%}"
+            + (" (uncal)" if r["uncalibrated"] else "") + " |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="dryrun_results.json")
+    ap.add_argument("--section", default="all",
+                    choices=["all", "dryrun", "roofline", "skips"])
+    args = ap.parse_args()
+    records = json.load(open(args.results))
+    if args.section in ("all", "dryrun"):
+        print("### Dry-run table\n")
+        print(dryrun_table(records))
+        print("\n### Skipped cells\n")
+        print(skips_table(records))
+    if args.section in ("all", "roofline"):
+        print("\n### Roofline (single-pod 16x16, scan-corrected)\n")
+        print(roofline_table(records))
+
+
+if __name__ == "__main__":
+    main()

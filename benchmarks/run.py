@@ -1,0 +1,50 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus a status column).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig6]
+"""
+import argparse
+import sys
+import traceback
+
+from . import (bench_fig6_tradeoff, bench_fig7_fig8_engines, bench_roofline,
+               bench_scheduler, bench_table1_flops, bench_table3_resources)
+
+MODULES = {
+    "table1": bench_table1_flops,
+    "fig6": bench_fig6_tradeoff,
+    "fig7_8": bench_fig7_fig8_engines,
+    "table3": bench_table3_resources,
+    "scheduler": bench_scheduler,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(MODULES))
+    args = ap.parse_args()
+
+    mods = {args.only: MODULES[args.only]} if args.only else MODULES
+    print("bench,name,value,derived,status")
+    failures = []
+    for key, mod in mods.items():
+        try:
+            for bench, name, value, derived, status in mod.run():
+                print(f"{bench},{name},{value},{derived!r},{status}")
+                if status in ("FAIL", "MISMATCH", "OVERFLOW"):
+                    failures.append((bench, name, status))
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((key, "exception", str(e)))
+    if failures:
+        print(f"\n{len(failures)} benchmark failures:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        raise SystemExit(1)
+    print("\nall benchmarks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: the CNNLab middleware in five steps (paper §III).
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. declare a network as layer tuples;
+2. let the scheduler run design-space exploration over the engine registry;
+3. inspect the trade-off analysis (the paper's Fig. 6 quantities);
+4. compile the plan into one JAX program;
+5. run it.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import engines, plan, scheduler, tradeoff
+from repro.core.device_models import DE5, K40, TPU_V5E
+from repro.core.layer_model import alexnet_full_spec
+
+# 1. the network: AlexNet declared as CNNLab layer tuples (paper Table I)
+net = alexnet_full_spec()
+print(f"network: {net.name}, {len(net)} layers, "
+      f"{net.param_count()/1e6:.1f}M params, "
+      f"{net.flops(1)/1e9:.2f} GFLOP/image\n")
+
+# 2. design-space exploration across every registered engine
+for objective in ("latency", "energy", "power"):
+    p = scheduler.schedule(net, engines.ALL_ENGINES, objective=objective)
+    picks = {a.engine for a in p.assignments}
+    print(f"objective={objective:<9} -> engines {sorted(picks)} "
+          f"time={p.total_time*1e3:.3f}ms energy={p.total_energy*1e3:.1f}mJ "
+          f"peak={p.peak_power:.1f}W")
+
+# 3. the paper's trade-off table (GPU vs FPGA, Fig. 6)
+print("\nper-layer trade-off (batch=109, as calibrated to the paper):")
+rows = tradeoff.analyze(net, [K40, DE5], batch=109)
+print(f"{'layer':<8}{'device':<12}{'ms':>10}{'GFLOPS':>10}{'W':>8}{'J':>9}")
+for r in rows:
+    if r.layer in ("Conv1", "Conv4", "FC6", "FC8"):
+        print(f"{r.layer:<8}{r.device:<12}{r.time_s*1e3:>10.3f}"
+              f"{r.throughput_gflops:>10.1f}{r.power_w:>8.2f}"
+              f"{r.energy_j:>9.3f}")
+
+# 4. compile the TPU plan (xla + pallas engines) into one program
+tpu_plan = scheduler.schedule(net, engines.DEFAULT_ENGINES,
+                              objective="latency")
+apply_fn = plan.compile_plan(tpu_plan)
+params = plan.init_network_params(net, jax.random.PRNGKey(0))
+
+# 5. run
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 224, 224, 3), jnp.float32)
+probs = jax.jit(apply_fn)(x, params)
+print(f"\ncompiled plan output: {probs.shape}, rows sum to "
+      f"{[round(float(s), 4) for s in probs.sum(-1)]}")
+print("engine per layer:",
+      {a.spec.name: a.engine for a in tpu_plan.assignments})

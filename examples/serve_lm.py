@@ -1,0 +1,19 @@
+"""Batched LM serving example (deliverable (b)): prefill + decode loop with
+request batching over the public API.
+
+    PYTHONPATH=src python examples/serve_lm.py --requests 8 --batch 4
+"""
+import subprocess
+import sys
+
+
+def main():
+    cmd = [sys.executable, "-m", "repro.launch.serve",
+           "--arch", "qwen2_1_5b", "--scale", "smoke",
+           "--batch", "4", "--prompt-len", "16", "--gen-len", "24",
+           "--requests", "8"] + sys.argv[1:]
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

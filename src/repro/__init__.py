@@ -1,0 +1,2 @@
+"""repro: CNNLab reproduced as a TPU-pod-scale JAX framework."""
+__version__ = "1.0.0"

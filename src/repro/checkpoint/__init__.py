@@ -1,0 +1,2 @@
+"""Checkpoint substrate: sharded, atomic, keep-k, elastic-reshard restore."""
+from .manager import CheckpointManager, restore_latest, save_checkpoint  # noqa

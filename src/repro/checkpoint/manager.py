@@ -1,0 +1,141 @@
+"""Fault-tolerant checkpointing.
+
+Design (no orbax dependency — built on numpy .npy + json):
+
+* every leaf of the state pytree is written as its own .npy file named by its
+  flattened tree path (process 0 gathers; on multi-host deployments each host
+  writes its addressable shards — here single-host);
+* a manifest.json records step, tree structure, dtypes, PRNG key, data-
+  pipeline cursor and the mesh shape the run used;
+* writes go to ``step_XXXX.tmp`` then ``os.rename`` → crash-atomic: a
+  half-written checkpoint is never visible;
+* keep-last-k garbage collection;
+* **elastic restore**: arrays are saved unsharded (logical content), so a
+  restart may use a *different* mesh — restore re-applies the current run's
+  sharding rules via device_put.  This is what makes scale-up/scale-down
+  restarts work.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _flatten_with_paths(tree: PyTree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(_path_str(p) for p in path)
+        out.append((name, leaf))
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, state: PyTree,
+                    extra: Optional[Dict] = None, keep: int = 3) -> str:
+    """Atomically write `state` (arbitrary pytree of arrays) at `step`."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves = _flatten_with_paths(state)
+    manifest = {"step": step, "leaves": [], "extra": extra or {}}
+    for name, leaf in leaves:
+        arr = np.asarray(jax.device_get(leaf))
+        fn = name.replace("/", "__") + ".npy"
+        np.save(os.path.join(tmp, fn), arr)
+        manifest["leaves"].append(
+            {"name": name, "file": fn, "dtype": str(arr.dtype),
+             "shape": list(arr.shape)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic publish
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = sorted(
+        (int(m.group(1)), d) for d in os.listdir(directory)
+        if (m := _STEP_RE.match(d)))
+    for _, d in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := _STEP_RE.match(d))]
+    return max(steps) if steps else None
+
+
+def restore_latest(directory: str, template: PyTree,
+                   shardings: Optional[PyTree] = None
+                   ) -> Optional[Tuple[int, PyTree, Dict]]:
+    """Restore into the structure of `template`; if `shardings` is given the
+    arrays are device_put with the *current* mesh's sharding (elastic)."""
+    step = latest_step(directory)
+    if step is None:
+        return None
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_name = {l["name"]: l for l in manifest["leaves"]}
+
+    names = [n for n, _ in _flatten_with_paths(template)]
+    treedef = jax.tree_util.tree_structure(template)
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(names))
+    leaves = []
+    for name, shard in zip(names, shard_leaves):
+        meta = by_name[name]
+        arr = np.load(os.path.join(path, meta["file"]))
+        if shard is not None:
+            leaves.append(jax.device_put(jnp.asarray(arr), shard))
+        else:
+            leaves.append(jnp.asarray(arr))
+    state = jax.tree_util.tree_unflatten(treedef, leaves)
+    return step, state, manifest.get("extra", {})
+
+
+class CheckpointManager:
+    """Convenience wrapper used by the train loop."""
+
+    def __init__(self, directory: str, interval: int = 100, keep: int = 3):
+        self.directory = directory
+        self.interval = interval
+        self.keep = keep
+
+    def maybe_save(self, step: int, state: PyTree,
+                   extra: Optional[Dict] = None, force: bool = False):
+        if force or (self.interval > 0 and step % self.interval == 0
+                     and step > 0):
+            return save_checkpoint(self.directory, step, state, extra,
+                                   self.keep)
+        return None
+
+    def restore(self, template: PyTree, shardings: Optional[PyTree] = None):
+        return restore_latest(self.directory, template, shardings)

@@ -1,0 +1,3 @@
+"""Per-architecture configs (exact published settings) + shape registry."""
+from .registry import (ARCH_NAMES, SHAPES, ArchSpec, ShapeSpec, all_archs,  # noqa
+                       get, input_specs, runnable_cells, supports)

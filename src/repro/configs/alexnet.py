@@ -1,0 +1,10 @@
+"""AlexNet — the paper's own experimental network (Table I), CNN family.
+
+Runs through the CNNLab core (layer tuples -> scheduler -> engines), not the
+LM substrate; exercised by examples/cnnlab_alexnet.py and the Fig. 6
+benchmarks.  LM shapes do not apply.
+"""
+FAMILY = "cnn"
+CONFIG = None
+SMOKE = None
+LR_SCHEDULE = "cosine"

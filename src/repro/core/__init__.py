@@ -1,0 +1,5 @@
+"""CNNLab core: the paper primary contribution in JAX.
+
+Layer tuples (III.B) -> device models -> cost model -> engine registry ->
+DSE scheduler -> execution plan -> trade-off analysis (IV).
+"""

@@ -1,0 +1,169 @@
+"""CNNLab cost model: per-layer time / power / energy / performance density.
+
+This is the quantity the paper's middleware optimizes during design-space
+exploration (§III.A "trade-off analysis"), generalized to the TPU roofline:
+
+    t_compute    = FLOPs / (chips x achieved FLOP/s)
+    t_memory     = bytes  / (chips x HBM bandwidth)
+    t_collective = collective bytes / (chips x link bandwidth)
+    t_total      = max(t_compute, t_memory, t_collective)   (overlap model)
+
+For empirical device models (K40/DE5, calibrated from the paper's
+measurements) only the compute term is used — the measurement already folds
+in memory behaviour.
+
+Derived metrics exactly as §IV.B defines them:
+    throughput        = FLOPs / t_total              (FLOP/s)
+    power             = device watts for the kind    (W)
+    energy            = t_total x power              (J)
+    perf density (1)  = throughput / power           (FLOPS/W)
+    perf density (2)  = FLOPs / energy               (FLOP/J)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .device_models import DeviceModel
+from .layer_model import LayerSpec, NetworkSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class CostBreakdown:
+    layer: str
+    kind: str
+    device: str
+    flops: int
+    bytes_moved: int
+    collective_bytes: int
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    power_w: float
+
+    @property
+    def t_total(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def throughput(self) -> float:
+        t = self.t_total
+        return self.flops / t if t > 0 else 0.0
+
+    @property
+    def energy_j(self) -> float:
+        return self.t_total * self.power_w
+
+    @property
+    def gflops_per_watt(self) -> float:
+        return self.throughput / 1e9 / self.power_w if self.power_w else 0.0
+
+    @property
+    def gflop_per_joule(self) -> float:
+        e = self.energy_j
+        return self.flops / 1e9 / e if e > 0 else 0.0
+
+
+def layer_cost(
+    spec: LayerSpec,
+    device: DeviceModel,
+    *,
+    batch: int = 1,
+    dtype_bytes: int = 4,
+    n_chips: int = 1,
+    collective_bytes: int = 0,
+    direction: str = "fwd",
+    mxu_efficiency: float = 1.0,
+) -> CostBreakdown:
+    """Cost one layer on one device model.
+
+    ``collective_bytes`` is per-chip traffic attributable to this layer's
+    sharding (0 for single-device); the caller (scheduler / roofline reader)
+    supplies it either analytically or parsed from compiled HLO.
+    """
+    flops = spec.flops(batch) if direction == "fwd" else spec.bwd_flops(batch)
+    bytes_moved = (
+        spec.activation_bytes(batch, dtype_bytes) + spec.param_bytes(dtype_bytes)
+    )
+    if direction == "bwd":
+        bytes_moved *= 2  # re-read activations + write grads (rough model)
+
+    kind = spec.kind
+    if device.analytic:
+        eff_peak = device.peak_flops * mxu_efficiency
+        t_c = flops / (n_chips * eff_peak)
+        t_m = bytes_moved / (n_chips * device.mem_bw)
+        t_x = (
+            collective_bytes / device.link_bw if device.link_bw and collective_bytes else 0.0
+        )
+        power = device.power_active
+    else:
+        t_c = flops / (n_chips * device.achieved_flops(kind, direction))
+        t_m = 0.0
+        t_x = 0.0
+        power = device.watts(kind, direction)
+    return CostBreakdown(
+        layer=spec.name,
+        kind=kind,
+        device=device.name,
+        flops=flops,
+        bytes_moved=bytes_moved,
+        collective_bytes=collective_bytes,
+        t_compute=t_c,
+        t_memory=t_m,
+        t_collective=t_x,
+        power_w=power,
+    )
+
+
+def network_cost(
+    net: NetworkSpec,
+    device: DeviceModel,
+    *,
+    batch: int = 1,
+    dtype_bytes: int = 4,
+    n_chips: int = 1,
+    direction: str = "fwd",
+) -> list:
+    return [
+        layer_cost(
+            l,
+            device,
+            batch=batch,
+            dtype_bytes=dtype_bytes,
+            n_chips=n_chips,
+            direction=direction,
+        )
+        for l in net
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Objectives (what the user asks the middleware to optimize, §III.A)
+# ---------------------------------------------------------------------------
+def objective_value(cost: CostBreakdown, objective: str) -> float:
+    """Lower is better for every objective."""
+    if objective == "latency":
+        return cost.t_total
+    if objective == "energy":
+        return cost.energy_j
+    if objective == "edp":  # energy-delay product
+        return cost.energy_j * cost.t_total
+    if objective == "power":
+        return cost.power_w
+    if objective == "perf_density":  # maximize GFLOPS/W -> minimize inverse
+        d = cost.gflops_per_watt
+        return 1.0 / d if d > 0 else float("inf")
+    raise ValueError(f"unknown objective: {objective}")
+
+
+OBJECTIVES = ("latency", "energy", "edp", "power", "perf_density")

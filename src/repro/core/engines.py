@@ -1,0 +1,151 @@
+"""Execution-engine registry — the paper's 'resource pool' (§III.A, Fig. 2).
+
+Each engine couples (a) a device/cost model the scheduler prices layers on,
+and (b) an optional builder that turns a LayerSpec into a runnable JAX
+callable ``f(x, params) -> y``.  Two engines are buildable on this target:
+
+* ``xla``    — jnp/lax implementations (kernels/ref.py); XLA fuses them.
+* ``pallas`` — the Pallas TPU kernels (kernels/ops.py) with explicit
+               BlockSpec VMEM tiling.
+
+The paper's own boards are registered as *cost-only* engines (no builder):
+``k40-cudnn``, ``k40-cublas``, ``de5-opencl``.  The scheduler can plan onto
+them — that is exactly how benchmarks/bench_fig6 regenerates the paper's
+trade-off study — but `plan.compile_plan` requires buildable engines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops, ref
+from . import device_models as dm
+from .layer_model import (AttentionSpec, ConvSpec, EmbeddingSpec, FCSpec,
+                          LayerSpec, MLPSpec, MoESpec, NormSpec, PoolSpec,
+                          SSMSpec)
+
+LayerFn = Callable[..., jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionEngine:
+    name: str
+    device: dm.DeviceModel
+    kinds: Tuple[str, ...]                       # layer kinds it can run
+    builder: Optional[Callable[[LayerSpec], LayerFn]] = None
+    # scheduler hint: fraction of device peak this engine typically reaches
+    # (cuDNN vs cuBLAS showed the library matters — §IV.C)
+    efficiency: float = 1.0
+
+    def supports(self, spec: LayerSpec) -> bool:
+        return spec.kind in self.kinds
+
+    @property
+    def buildable(self) -> bool:
+        return self.builder is not None
+
+    def build(self, spec: LayerSpec) -> LayerFn:
+        if not self.buildable:
+            raise ValueError(
+                f"engine {self.name} is cost-only (paper device); cannot build")
+        if not self.supports(spec):
+            raise ValueError(f"engine {self.name} does not support {spec.kind}")
+        return self.builder(spec)
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+def _build_xla(spec: LayerSpec) -> LayerFn:
+    if isinstance(spec, ConvSpec):
+        return functools.partial(
+            _conv_apply, impl=ref.conv2d_ref, stride=spec.stride,
+            padding=spec.padding, activation=spec.nonlinearity)
+    if isinstance(spec, FCSpec):
+        return functools.partial(_fc_apply, impl=ref.fc_ref,
+                                 activation=spec.activation)
+    if isinstance(spec, PoolSpec):
+        impl = ref.maxpool_ref if spec.pool_type == "max" else ref.avgpool_ref
+        return lambda x, params: impl(x, window=spec.window, stride=spec.stride)
+    if isinstance(spec, NormSpec) and spec.norm_type == "lrn":
+        return lambda x, params: ref.lrn_ref(
+            x, local_size=spec.local_size, alpha=spec.alpha, beta=spec.beta)
+    raise NotImplementedError(f"xla builder: {type(spec).__name__}")
+
+
+def _build_pallas(spec: LayerSpec) -> LayerFn:
+    if isinstance(spec, ConvSpec):
+        return functools.partial(
+            _conv_apply, impl=ops.conv2d, stride=spec.stride,
+            padding=spec.padding, activation=spec.nonlinearity)
+    if isinstance(spec, FCSpec):
+        return functools.partial(_fc_apply, impl=ops.fc,
+                                 activation=spec.activation)
+    if isinstance(spec, PoolSpec):
+        return lambda x, params: ops.pool(
+            x, window=spec.window, stride=spec.stride, pool_type=spec.pool_type)
+    if isinstance(spec, NormSpec) and spec.norm_type == "lrn":
+        return lambda x, params: ops.lrn(
+            x, local_size=spec.local_size, alpha=spec.alpha, beta=spec.beta)
+    raise NotImplementedError(f"pallas builder: {type(spec).__name__}")
+
+
+def _conv_apply(x, params, *, impl, stride, padding, activation):
+    return impl(x, params["w"], params.get("b"), stride=stride,
+                padding=padding, activation=activation)
+
+
+def _fc_apply(x, params, *, impl, activation):
+    if x.ndim > 2:
+        x = x.reshape(x.shape[0], -1)
+    return impl(x, params["w"], params.get("b"), activation=activation)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init (specs are declarative; engines share one param layout)
+# ---------------------------------------------------------------------------
+def init_layer_params(spec: LayerSpec, key: jax.Array,
+                      dtype=jnp.float32) -> Dict[str, jax.Array]:
+    if isinstance(spec, ConvSpec):
+        oc, ic, kh, kw = spec.m_k
+        fan_in = ic * kh * kw
+        w = jax.random.normal(key, (oc, ic, kh, kw), dtype) * (2.0 / fan_in) ** 0.5
+        return {"w": w, "b": jnp.zeros((oc,), dtype)}
+    if isinstance(spec, FCSpec):
+        w = jax.random.normal(key, (spec.n_in, spec.k_o), dtype) * (
+            2.0 / spec.n_in) ** 0.5
+        return {"w": w, "b": jnp.zeros((spec.k_o,), dtype)}
+    return {}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+_CNN_KINDS = ("conv", "fc", "pool", "norm")
+
+XLA_ENGINE = ExecutionEngine(
+    name="xla", device=dm.TPU_V5E, kinds=_CNN_KINDS + (
+        "attention", "mlp", "moe", "ssm", "embedding"),
+    builder=_build_xla, efficiency=0.55)
+PALLAS_ENGINE = ExecutionEngine(
+    name="pallas", device=dm.TPU_V5E, kinds=_CNN_KINDS + ("attention",),
+    builder=_build_pallas, efficiency=0.75)
+
+# cost-only paper devices
+K40_CUDNN_ENGINE = ExecutionEngine(
+    name="k40-cudnn", device=dm.K40_CUDNN, kinds=_CNN_KINDS)
+K40_CUBLAS_ENGINE = ExecutionEngine(
+    name="k40-cublas", device=dm.K40_CUBLAS, kinds=_CNN_KINDS)
+K40_ENGINE = ExecutionEngine(name="k40", device=dm.K40, kinds=_CNN_KINDS)
+DE5_ENGINE = ExecutionEngine(name="de5-opencl", device=dm.DE5, kinds=_CNN_KINDS)
+
+DEFAULT_ENGINES = (XLA_ENGINE, PALLAS_ENGINE)
+PAPER_ENGINES = (K40_ENGINE, DE5_ENGINE)
+ALL_ENGINES = DEFAULT_ENGINES + PAPER_ENGINES + (
+    K40_CUDNN_ENGINE, K40_CUBLAS_ENGINE)
+
+ENGINES_BY_NAME = {e.name: e for e in ALL_ENGINES}

@@ -1,0 +1,3 @@
+"""Data pipeline substrate."""
+from .pipeline import (DataConfig, SyntheticLM, TextFileLM, make_pipeline,  # noqa
+                       batch_abstract_shapes)

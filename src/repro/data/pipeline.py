@@ -1,0 +1,151 @@
+"""Token data pipeline: deterministic, resumable, host-shard aware.
+
+Two sources:
+* SyntheticLM — structured pseudo-text (a mixture of n-gram-ish processes
+  with a PRNG keyed by (seed, step, host)) so loss curves are meaningful
+  (there is learnable structure) without external data.
+* TextFileLM  — byte-level tokenization of a local corpus file, chunked.
+
+Determinism/resume: `state()` returns an opaque cursor stored in
+checkpoints; `restore(cursor)` resumes the stream exactly — a node restart
+replays no sample twice (fault-tolerance requirement).
+
+Multi-host: each host produces only its shard of the global batch
+(`host_index`/`host_count`); on a single-host dry-run/CI this degenerates to
+the full batch.  Audio/vision stub frontends emit the precomputed embedding
+tensors the assignment mandates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    global_batch: int = 8
+    seq_len: int = 128
+    vocab: int = 256
+    seed: int = 0
+    host_index: int = 0
+    host_count: int = 1
+    frontend: str = "none"           # none | audio | vision
+    d_model: int = 0                 # for frontend embedding stubs
+    img_seq: int = 0
+    enc_len: int = 0
+
+    @property
+    def host_batch(self) -> int:
+        assert self.global_batch % self.host_count == 0
+        return self.global_batch // self.host_count
+
+
+class SyntheticLM:
+    """Markov-chain pseudo-language: tokens follow a fixed random bigram
+    table, so a real model achieves loss << log(V) — tests can assert
+    learning actually happens."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        v = cfg.vocab
+        # sparse-ish bigram transition table: each token prefers ~8 successors
+        succ = rng.integers(0, v, size=(v, 8))
+        self._succ = succ.astype(np.int32)
+        self._step = 0
+
+    def state(self) -> Dict:
+        return {"step": self._step}
+
+    def restore(self, state: Dict) -> None:
+        self._step = int(state["step"])
+
+    def __iter__(self) -> Iterator[Dict[str, jax.Array]]:
+        return self
+
+    def __next__(self) -> Dict[str, jax.Array]:
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            (cfg.seed, self._step, cfg.host_index))
+        b, s = cfg.host_batch, cfg.seq_len
+        toks = np.empty((b, s + 1), np.int32)
+        toks[:, 0] = rng.integers(0, cfg.vocab, size=b)
+        choices = rng.integers(0, 8, size=(b, s))
+        for t in range(s):
+            toks[:, t + 1] = self._succ[toks[:, t], choices[:, t]]
+        self._step += 1
+        batch = {"tokens": jnp.asarray(toks[:, :-1]),
+                 "labels": jnp.asarray(toks[:, 1:])}
+        batch.update(_frontend_stub(cfg, rng))
+        return batch
+
+
+class TextFileLM:
+    """Byte-level LM over a local file, sequential chunks, resumable."""
+
+    def __init__(self, cfg: DataConfig, path: str):
+        self.cfg = cfg
+        self.data = np.frombuffer(open(path, "rb").read(), dtype=np.uint8)
+        assert self.data.size > cfg.seq_len + 1, "corpus too small"
+        self._cursor = 0
+
+    def state(self) -> Dict:
+        return {"cursor": self._cursor}
+
+    def restore(self, state: Dict) -> None:
+        self._cursor = int(state["cursor"])
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> Dict[str, jax.Array]:
+        cfg = self.cfg
+        b, s = cfg.host_batch, cfg.seq_len
+        n = self.data.size - (s + 1)
+        rows = []
+        for i in range(b):
+            start = (self._cursor + i * (s + 1)) % n
+            rows.append(self.data[start:start + s + 1].astype(np.int32))
+        self._cursor = (self._cursor + b * (s + 1)) % n
+        arr = np.stack(rows)
+        return {"tokens": jnp.asarray(arr[:, :-1]),
+                "labels": jnp.asarray(arr[:, 1:])}
+
+
+def _frontend_stub(cfg: DataConfig, rng) -> Dict[str, jax.Array]:
+    """Precomputed frontend embeddings (the assignment's modality stub)."""
+    out = {}
+    if cfg.frontend == "audio" and cfg.d_model:
+        enc_len = cfg.enc_len or cfg.seq_len
+        out["enc_inputs"] = jnp.asarray(
+            rng.standard_normal((cfg.host_batch, enc_len, cfg.d_model),
+                                dtype=np.float32))
+    if cfg.frontend == "vision" and cfg.d_model:
+        out["img_embeds"] = jnp.asarray(
+            rng.standard_normal((cfg.host_batch, cfg.img_seq, cfg.d_model),
+                                dtype=np.float32))
+    return out
+
+
+def make_pipeline(cfg: DataConfig, corpus: Optional[str] = None):
+    if corpus:
+        return TextFileLM(cfg, corpus)
+    return SyntheticLM(cfg)
+
+
+def batch_abstract_shapes(cfg: DataConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the dry-run (GLOBAL batch shapes)."""
+    b, s = cfg.global_batch, cfg.seq_len
+    out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+           "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.frontend == "audio" and cfg.d_model:
+        out["enc_inputs"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_len or s, cfg.d_model), jnp.bfloat16)
+    if cfg.frontend == "vision" and cfg.d_model:
+        out["img_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.img_seq, cfg.d_model), jnp.bfloat16)
+    return out

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the CNNLab compute hot-spots.
+
+One kernel per FPGA module of the paper Table III (Conv, LRN, FC/matmul,
+Pooling) plus flash attention for the transformer architectures.  `ops`
+exposes jit-d padding-aware wrappers; `ref` holds the pure-jnp oracles.
+"""
+from . import ops, ref  # noqa: F401

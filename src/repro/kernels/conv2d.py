@@ -1,0 +1,100 @@
+"""Conv2D Pallas kernel — the Conv module (paper Table III, 'Conv Layer').
+
+TPU-native rethink of the FPGA line-buffer + systolic MAC array: instead of
+streaming rows through a shift register, we stage the (padded) image in VMEM,
+build the im2col patch matrix *in registers* with static strided slices
+(one per (kh, kw) tap — the unrolled taps are the analogue of the FPGA's
+MAC taps), and feed a single MXU matmul per image:
+
+    patches (OH*OW, KH*KW*IC)  @  filters (KH*KW*IC, OC)
+
+Grid is over the batch dimension; per-image working set for every AlexNet
+layer fits in 16 MiB VMEM (largest: Conv2, ~10 MiB fp32).  Padding is applied
+in ops.py so the kernel sees only 'VALID' geometry.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv2d_kernel(x_ref, w_ref, b_ref, o_ref, *, kh: int, kw: int,
+                   stride: int, oh: int, ow: int, activation: str):
+    x = x_ref[...]          # (1, H, W, IC) padded input block
+    w = w_ref[...]          # (KH*KW*IC, OC) pre-reshaped filters
+    x = x[0]
+    ic = x.shape[-1]
+    taps = []
+    for i in range(kh):          # static unroll: one tap per kernel element
+        for j in range(kw):
+            lim_h = i + (oh - 1) * stride + 1
+            lim_w = j + (ow - 1) * stride + 1
+            taps.append(x[i:lim_h:stride, j:lim_w:stride, :])
+    # (OH, OW, KH*KW, IC) -> (OH*OW, KH*KW*IC); ordering matches w reshape
+    patches = jnp.stack(taps, axis=2).reshape(oh * ow, kh * kw * ic)
+    acc = jnp.dot(patches, w, preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...].astype(jnp.float32)
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif activation == "sigmoid":
+        acc = jax.nn.sigmoid(acc)
+    elif activation == "tanh":
+        acc = jnp.tanh(acc)
+    o_ref[...] = acc.reshape(1, oh, ow, -1).astype(o_ref.dtype)
+
+
+def conv2d_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    stride: int = 1,
+    padding: int = 0,
+    activation: str = "none",
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (N, H, W, IC); w: (OC, IC, KH, KW) — Table I layout.  Returns NHWC."""
+    n, h, wdt, ic = x.shape
+    oc, ic2, kh, kw = w.shape
+    assert ic == ic2, (x.shape, w.shape)
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+        h, wdt = h + 2 * padding, wdt + 2 * padding
+    oh = (h - kh) // stride + 1
+    ow = (wdt - kw) // stride + 1
+    # (OC, IC, KH, KW) -> (KH, KW, IC, OC) -> (KH*KW*IC, OC): tap-major rows
+    w_mat = jnp.transpose(w, (2, 3, 1, 0)).reshape(kh * kw * ic, oc)
+    if bias is None:
+        bias = jnp.zeros((oc,), dtype=jnp.float32)
+
+    kernel = functools.partial(
+        _conv2d_kernel, kh=kh, kw=kw, stride=stride, oh=oh, ow=ow,
+        activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, h, wdt, ic), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((kh * kw * ic, oc), lambda i: (0, 0)),
+            pl.BlockSpec((oc,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, oh, ow, oc), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, oc), x.dtype),
+        interpret=interpret,
+    )(x, w_mat, bias)
+
+
+def conv2d_vmem_bytes(h: int, w: int, ic: int, oc: int, kh: int, kw: int,
+                      stride: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM working-set estimate for the Table III resource analogue."""
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    x_bytes = h * w * ic * dtype_bytes
+    w_bytes = kh * kw * ic * oc * dtype_bytes
+    patch_bytes = oh * ow * kh * kw * ic * dtype_bytes
+    out_bytes = oh * ow * oc * 4  # fp32 accumulator
+    return x_bytes + w_bytes + patch_bytes + out_bytes

@@ -1,0 +1,56 @@
+"""LRN Pallas kernel — the Norm module (paper Table III, 'LRN').
+
+Across-channel local response normalization (AlexNet / Caffe form), Eq. 6's
+⟨M_I, T, S, α, β⟩ tuple:
+
+    y = x / (k + (α/n) · Σ_{window n over channels} x²) ^ β
+
+The FPGA module used 3 DSPs + LUT math at 269 MHz; the TPU analogue is a VPU
+elementwise pipeline.  The channel window is materialized with `local_size`
+shifted adds over a channel-padded square — all VMEM-resident per image row
+block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lrn_kernel(x_ref, o_ref, *, local_size: int, alpha: float, beta: float,
+                k: float):
+    x = x_ref[...].astype(jnp.float32)       # (1, BH, W, C)
+    sq = jnp.square(x)
+    half = local_size // 2
+    c = x.shape[-1]
+    padded = jnp.pad(sq, ((0, 0), (0, 0), (0, 0), (half, half)))
+    acc = jnp.zeros_like(sq)
+    for i in range(local_size):              # static unroll over the window
+        acc = acc + jax.lax.dynamic_slice_in_dim(padded, i, c, axis=3)
+    denom = jnp.power(k + (alpha / local_size) * acc, beta)
+    o_ref[...] = (x / denom).astype(o_ref.dtype)
+
+
+def lrn_pallas(
+    x: jax.Array,
+    *,
+    local_size: int = 5,
+    alpha: float = 1e-4,
+    beta: float = 0.75,
+    k: float = 2.0,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (N, H, W, C) NHWC."""
+    n, h, w, c = x.shape
+    kernel = functools.partial(
+        _lrn_kernel, local_size=local_size, alpha=alpha, beta=beta, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,55 @@
+"""Pooling Pallas kernel — the Pool module (paper Table III, 'Pooling').
+
+The FPGA module was a comparator tree at 304.5 MHz with zero DSPs; the TPU
+analogue is a VPU reduction.  Per-image grid; the window taps are unrolled
+statically (like conv2d's im2col taps) and reduced with max / add.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_kernel(x_ref, o_ref, *, window: int, stride: int, oh: int, ow: int,
+                 pool_type: str):
+    x = x_ref[...][0]                      # (H, W, C)
+    taps = []
+    for i in range(window):
+        for j in range(window):
+            lim_h = i + (oh - 1) * stride + 1
+            lim_w = j + (ow - 1) * stride + 1
+            taps.append(x[i:lim_h:stride, j:lim_w:stride, :])
+    stacked = jnp.stack(taps, axis=0)      # (win*win, OH, OW, C)
+    if pool_type == "max":
+        out = jnp.max(stacked, axis=0)
+    else:
+        out = jnp.mean(stacked.astype(jnp.float32), axis=0).astype(x.dtype)
+    o_ref[...] = out[None]
+
+
+def pool_pallas(
+    x: jax.Array,
+    *,
+    window: int = 3,
+    stride: int = 2,
+    pool_type: str = "max",
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (N, H, W, C) NHWC, VALID padding."""
+    n, h, w, c = x.shape
+    oh = (h - window) // stride + 1
+    ow = (w - window) // stride + 1
+    kernel = functools.partial(
+        _pool_kernel, window=window, stride=stride, oh=oh, ow=ow,
+        pool_type=pool_type)
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, oh, ow, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, c), x.dtype),
+        interpret=interpret,
+    )(x)

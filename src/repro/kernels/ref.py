@@ -1,0 +1,121 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references the kernel tests sweep against
+(shapes x dtypes, interpret=True).  They are also the implementations the
+XLA execution engine (core/engines.py) uses, so "engine A vs engine B" in
+the CNNLab scheduler is literally "ref.py vs the Pallas kernel".
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """(M, K) @ (K, N) with fp32 accumulation."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def fc_ref(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
+           activation: str = "none") -> jax.Array:
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b
+    y = _activate(y, activation)
+    return y.astype(x.dtype)
+
+
+def _activate(y: jax.Array, activation: str) -> jax.Array:
+    if activation == "relu":
+        return jax.nn.relu(y)
+    if activation == "sigmoid":
+        return jax.nn.sigmoid(y)
+    if activation == "tanh":
+        return jnp.tanh(y)
+    if activation == "softmax":
+        return jax.nn.softmax(y, axis=-1)
+    if activation == "none":
+        return y
+    raise ValueError(f"unknown activation {activation}")
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
+               *, stride: int = 1, padding: int = 0,
+               activation: str = "none") -> jax.Array:
+    """NHWC input, (OC, IC, KH, KW) filters (paper Table I order)."""
+    w_hwio = jnp.transpose(w, (2, 3, 1, 0))  # -> (KH, KW, IC, OC)
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w_hwio.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if b is not None:
+        y = y + b
+    return _activate(y, activation).astype(x.dtype)
+
+
+def maxpool_ref(x: jax.Array, *, window: int = 3, stride: int = 2) -> jax.Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf if jnp.issubdtype(x.dtype, jnp.floating) else jnp.iinfo(x.dtype).min,
+        jax.lax.max, (1, window, window, 1), (1, stride, stride, 1), "VALID")
+
+
+def avgpool_ref(x: jax.Array, *, window: int = 3, stride: int = 2) -> jax.Array:
+    s = jax.lax.reduce_window(
+        x.astype(jnp.float32), 0.0, jax.lax.add,
+        (1, window, window, 1), (1, stride, stride, 1), "VALID")
+    return (s / (window * window)).astype(x.dtype)
+
+
+def lrn_ref(x: jax.Array, *, local_size: int = 5, alpha: float = 1e-4,
+            beta: float = 0.75, k: float = 2.0) -> jax.Array:
+    """Across-channel local response normalization (AlexNet / Caffe form):
+
+        y = x / (k + (alpha/n) * sum_{window n} x^2) ** beta
+
+    NHWC; window runs over the channel axis.
+    """
+    sq = jnp.square(x.astype(jnp.float32))
+    half = local_size // 2
+    # pad channels and take a windowed sum via shifted adds
+    padded = jnp.pad(sq, ((0, 0), (0, 0), (0, 0), (half, half)))
+    c = x.shape[-1]
+    acc = jnp.zeros_like(sq)
+    for i in range(local_size):
+        acc = acc + jax.lax.dynamic_slice_in_dim(padded, i, c, axis=3)
+    denom = jnp.power(k + (alpha / local_size) * acc, beta)
+    return (x.astype(jnp.float32) / denom).astype(x.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  scale: Optional[float] = None) -> jax.Array:
+    """Reference MHA.  q: (B, HQ, S, D); k/v: (B, HK, T, D); GQA by repeat.
+
+    ``window``: sliding-window attention width (each query attends to the
+    last `window` keys, inclusive of itself).
+    """
+    b, hq, s, d = q.shape
+    hk = k.shape[1]
+    if hk != hq:
+        rep = hq // hk
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    t = k.shape[2]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None] + (t - s)   # align ends (decode-friendly)
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,282 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod);
+  2. builds the step function + shardings (launch/steps.py);
+  3. ``jax.jit(...).lower(*abstract).compile()`` — ShapeDtypeStruct inputs,
+     so nothing is allocated; success proves the distribution config is
+     coherent (shardings consistent, collectives legal, memory fits);
+  4. records memory_analysis(), cost_analysis() and the per-collective byte
+     counts parsed from the post-SPMD optimized HLO into a JSON file that
+     benchmarks/bench_roofline.py turns into EXPERIMENTS.md §Roofline.
+
+The XLA_FLAGS line above MUST run before any jax import (device count locks
+on first init) — which is why it is the first statement of this module, and
+why nothing else in the repo sets it globally.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from ..configs import registry
+from .mesh import make_production_mesh
+from .steps import build_step
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f16": 2, "bf16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every collective op in the (per-device,
+    post-SPMD) optimized HLO.  Result bytes ≈ bytes moved per chip per op
+    (all-gather result = gathered tensor; all-reduce result = full tensor;
+    reduce-scatter result = shard)."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for coll in _COLLECTIVES:
+            # match "<op> = <type> <collective>(" — post-optimization form
+            m = re.search(rf"=\s+(.*?)\s+{coll}(?:-start|-done)?\(", stripped)
+            if m:
+                # `-done` ops repeat the type of `-start`; count starts only
+                if f"{coll}-done" in stripped:
+                    break
+                out[coll] += _shape_bytes(m.group(1))
+                out["count"] += 1
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             extra_cfg: Optional[dict] = None) -> Dict:
+    """Lower + compile one cell; returns the roofline record."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    arch = registry.get(arch_name)
+    if extra_cfg:
+        import dataclasses
+        arch = dataclasses.replace(
+            arch, config=dataclasses.replace(arch.config, **extra_cfg))
+    ok, reason = registry.supports(arch, shape_name)
+    if not ok:
+        return {"arch": arch_name, "shape": shape_name,
+                "mesh": "multipod" if multi_pod else "pod",
+                "status": "skipped", "reason": reason}
+
+    t0 = time.time()
+    fn, in_sh, out_sh, donate, args = build_step(arch, shape_name, mesh)
+    jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                  donate_argnums=donate)
+    with mesh:
+        lowered = jfn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = parse_collective_bytes(compiled.as_text())
+    n_chips = mesh.devices.size
+
+    record = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": "multipod" if multi_pod else "pod",
+        "status": "ok",
+        "n_chips": int(n_chips),
+        "mode": registry.SHAPES[shape_name].mode,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        # per-device numbers (the compiled module is the per-device program)
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes_per_device": coll["total"],
+        "collectives": {k: coll[k] for k in _COLLECTIVES},
+        "collective_count": coll["count"],
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+    }
+    return record
+
+
+def calibration_overrides(arch: "registry.ArchSpec", shape_name: str):
+    """Two config variants whose HLO cost is exactly countable (no inner
+    while loops: dot attention, single-chunk scans) at depth 0 and depth
+    one-super-block.  bench_roofline reconstructs full-depth FLOPs/bytes as
+        corrected = L0 + (n_layers / unit_len) * (L1 - L0)
+    because XLA's HloCostAnalysis counts while bodies once, not x trip count.
+    """
+    cfg = arch.config
+    shape = registry.SHAPES[shape_name]
+    unit = len(cfg.pattern_unit())
+    base = {"attention_impl": "dot"}
+    if shape.mode != "decode":
+        base["scan_chunk"] = shape.seq_len         # single-chunk SSM scans
+    l0 = dict(base, n_layers=0)
+    l1 = dict(base, n_layers=unit)
+    if cfg.encoder_decoder:
+        l0["enc_layers"] = 0
+        l1["enc_layers"] = 1
+    return l0, l1
+
+
+def run_calibration(arch_name: str, shape_name: str) -> Dict:
+    arch = registry.get(arch_name)
+    ok, reason = registry.supports(arch, shape_name)
+    if not ok:
+        return {"arch": arch_name, "shape": shape_name, "mesh": "pod",
+                "status": "skipped", "calibration": True, "reason": reason}
+    l0, l1 = calibration_overrides(arch, shape_name)
+    rec0 = run_cell(arch_name, shape_name, False, extra_cfg=l0)
+    rec1 = run_cell(arch_name, shape_name, False, extra_cfg=l1)
+    out = {"arch": arch_name, "shape": shape_name, "mesh": "pod",
+           "status": "ok", "calibration": True,
+           "unit_len": len(arch.config.pattern_unit()),
+           "n_layers": arch.config.n_layers}
+    for tag, rec in (("L0", rec0), ("L1", rec1)):
+        for k in ("flops_per_device", "bytes_per_device",
+                  "collective_bytes_per_device"):
+            out[f"{tag}_{k}"] = rec[k]
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["pod", "multipod",
+                                                       "both"])
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (perf iterations)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="run the L0/L1 cost-calibration compiles (pod mesh)")
+    args = ap.parse_args()
+
+    extra = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        extra[k] = v
+
+    archs = ([a for a in registry.ARCH_NAMES if a != "alexnet"]
+             if args.arch == "all" else [args.arch])
+    shapes = list(registry.SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.mesh == "both" else \
+        [args.mesh == "multipod"]
+
+    if args.calibrate:
+        results = []
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                results = json.load(f)
+        done = {(r["arch"], r["shape"]) for r in results
+                if r.get("calibration") and r.get("status") in ("ok",
+                                                                "skipped")}
+        for arch_name in archs:
+            for shape_name in shapes:
+                if (arch_name, shape_name) in done:
+                    print(f"[skip cached cal] {(arch_name, shape_name)}")
+                    continue
+                print(f"[calibrate] {(arch_name, shape_name)} ...",
+                      flush=True)
+                try:
+                    rec = run_calibration(arch_name, shape_name)
+                except Exception as e:
+                    rec = {"arch": arch_name, "shape": shape_name,
+                           "mesh": "pod", "status": "error",
+                           "calibration": True,
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                print(f"[{rec['status']}] cal {(arch_name, shape_name)}",
+                      flush=True)
+        return
+
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if r.get("status") == "ok" and not extra}
+
+    for arch_name in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                key = (arch_name, shape_name,
+                       "multipod" if multi_pod else "pod")
+                if key in done:
+                    print(f"[skip cached] {key}")
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                try:
+                    rec = run_cell(arch_name, shape_name, multi_pod,
+                                   extra_cfg=extra or None)
+                except Exception as e:  # a failure here is a bug; record it
+                    rec = {"arch": arch_name, "shape": shape_name,
+                           "mesh": "multipod" if multi_pod else "pod",
+                           "status": "error", "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                if extra:
+                    rec["overrides"] = extra
+                results = [r for r in results if
+                           (r["arch"], r["shape"], r["mesh"]) != key
+                           or r.get("overrides") != rec.get("overrides")]
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                status = rec["status"]
+                msg = rec.get("error", "")
+                if status == "ok":
+                    msg = (f"compile {rec['compile_s']}s, "
+                           f"{rec['flops_per_device']/1e9:.1f} GFLOP/dev, "
+                           f"coll {rec['collective_bytes_per_device']/1e6:.1f} MB/dev")
+                print(f"[{status}] {key} {msg}", flush=True)
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\ndry-run complete: {n_ok} ok, {n_err} errors -> {args.out}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

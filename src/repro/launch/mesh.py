@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: 16x16 = 256 chips (v5e pod),
+axes (data, model).  Multi-pod: 2 pods = 512 chips, axes (pod, data, model);
+'pod' is the outer data-parallel axis whose collectives cross DCN.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices but only {len(devs)} are "
+            f"visible. For the dry-run, set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=512 BEFORE importing "
+            f"jax (launch/dryrun.py does this).")
+    try:
+        return jax.make_mesh(shape, axes, devices=devs[:need])
+    except TypeError:  # older make_mesh without `devices`
+        return Mesh(np.asarray(devs[:need]).reshape(shape), axes)
+
+
+def make_host_mesh() -> Mesh:
+    """Degenerate 1x1 mesh for CPU smoke tests / examples."""
+    dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))

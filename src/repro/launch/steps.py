@@ -1,0 +1,160 @@
+"""Step builders shared by the dry-run, trainer and server.
+
+Each builder returns (fn, in_shardings, out_shardings, donate_argnums,
+abstract_args) so callers can jit/lower uniformly:
+
+    fn, in_sh, out_sh, donate, args = build_step(arch, shape_name, mesh)
+    lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                      donate_argnums=donate).lower(*args)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import registry
+from ..models import sharding as shard_lib
+from ..models import transformer as T
+from ..optim import adamw, schedules
+
+PyTree = Any
+
+
+def _schedule(name: str):
+    if name == "wsd":
+        return schedules.wsd_schedule(3e-4, 500, 8000, 1500)
+    return schedules.cosine_schedule(3e-4, 500, 10000)
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _opt_shardings(mesh, param_sh):
+    return adamw.AdamWState(step=_replicated(mesh), mu=param_sh, nu=param_sh)
+
+
+def abstract_params(cfg: T.ModelConfig):
+    return jax.eval_shape(
+        functools.partial(T.init_params, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def build_step(arch: registry.ArchSpec, shape_name: str, mesh,
+               *, grad_accum: int = 1):
+    import dataclasses
+
+    cfg = arch.config
+    shape = registry.SHAPES[shape_name]
+    policy = shard_lib.make_policy(cfg, mesh)
+
+    # pin activation sharding (ZeRO-3: params' storage shards must not steal
+    # the batch/seq axes from activations — see models/transformer.py).
+    # resolve against the MICRObatch size: with gradient accumulation the
+    # forward sees global_batch / accum sequences
+    accum_eff = max(grad_accum, cfg.grad_accum)
+    micro_b = max(shape.global_batch // accum_eff, 1)
+    tok_spec = policy.resolve((micro_b, shape.seq_len), ["batch", "seq"])
+    cfg = dataclasses.replace(
+        cfg, act_sharding=(tok_spec[0] if len(tok_spec) > 0 else None,
+                           tok_spec[1] if len(tok_spec) > 1 else None))
+    arch = dataclasses.replace(arch, config=cfg)
+
+    p_shapes = abstract_params(cfg)
+    p_sh = shard_lib.param_shardings(cfg, policy, p_shapes)
+    spec = registry.input_specs(arch, shape_name)
+
+    if shape.mode == "train":
+        o_shapes = jax.eval_shape(adamw.adamw_init, p_shapes)
+        o_sh = _opt_shardings(mesh, p_sh)
+        b_sh = shard_lib.batch_shardings(cfg, policy, spec["batch"])
+        init_opt, update = adamw.make_optimizer(_schedule(arch.lr_schedule))
+
+        accum = max(grad_accum, cfg.grad_accum)
+
+        def train_step(params, opt_state, batch):
+            if accum > 1:
+                loss, grads = _accum_grads(params, cfg, batch, accum)
+            else:
+                loss, grads = jax.value_and_grad(T.loss_fn)(params, cfg, batch)
+            new_p, new_o, metrics = update(grads, opt_state, params)
+            return new_p, new_o, {"loss": loss, **metrics}
+
+        metrics_sh = {"loss": _replicated(mesh), "lr": _replicated(mesh),
+                      "grad_norm": _replicated(mesh)}
+        return (train_step,
+                (p_sh, o_sh, b_sh),
+                (p_sh, o_sh, metrics_sh),
+                (0, 1),
+                (p_shapes, o_shapes, spec["batch"]))
+
+    if shape.mode == "prefill":
+        extras = [k for k in ("enc_inputs", "img_embeds") if k in spec]
+        tok_sh = policy.named(tuple(spec["tokens"].shape), ["batch", "seq"])
+        extra_sh = tuple(
+            policy.named(tuple(spec[k].shape), ["batch", "seq", None])
+            for k in extras)
+        logits_sh = policy.named(
+            (shape.global_batch, 1, cfg.vocab), ["batch", None, "vocab"])
+
+        def prefill_step(params, tokens, *extra):
+            kw = dict(zip(extras, extra))
+            logits, cache = T.forward(params, cfg, tokens, emit_cache=True,
+                                      **kw)
+            return logits[:, -1:], cache
+
+        abstract_args = (p_shapes, spec["tokens"]) + tuple(
+            spec[k] for k in extras)
+        # cache sharding from the *emitted* structure (matches serve_step's);
+        # eval under the mesh context: the activation sharding constraints
+        # inside forward() reference mesh axis names
+        with mesh:
+            cache_shapes = jax.eval_shape(prefill_step, *abstract_args)[1]
+        cache_sh = shard_lib.cache_shardings(cfg, policy, cache_shapes)
+
+        return (prefill_step,
+                (p_sh, tok_sh) + extra_sh,
+                (logits_sh, cache_sh),
+                (),
+                abstract_args)
+
+    # decode
+    cache_shapes = spec["cache"]
+    cache_sh = shard_lib.cache_shardings(cfg, policy, cache_shapes)
+    tok_sh = policy.named((shape.global_batch, 1), ["batch", None])
+    logits_sh = policy.named(
+        (shape.global_batch, 1, cfg.vocab), ["batch", None, "vocab"])
+
+    def serve_step(params, cache, tokens):
+        return T.decode_step(params, cfg, cache, tokens)
+
+    return (serve_step,
+            (p_sh, cache_sh, tok_sh),
+            (logits_sh, cache_sh),
+            (1,),
+            (p_shapes, cache_shapes, spec["tokens"]))
+
+
+def _accum_grads(params, cfg, batch, n):
+    """Gradient accumulation over n microbatches (scan over batch splits)."""
+    def micro(carry, mb):
+        loss_acc, grads_acc = carry
+        loss, grads = jax.value_and_grad(T.loss_fn)(params, cfg, mb)
+        return (loss_acc + loss / n,
+                jax.tree.map(lambda a, g: a + g / n, grads_acc, grads)), None
+
+    def split(x):
+        b = x.shape[0]
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    micro_batches = jax.tree.map(split, batch)
+    zero_grads = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+    (loss, grads), _ = jax.lax.scan(micro, (jnp.zeros((), jnp.float32),
+                                            zero_grads), micro_batches)
+    return loss, grads
+
+

@@ -1,0 +1,4 @@
+"""Model substrate: unified transformer family + AlexNet CNN + sharding."""
+from .transformer import (ModelConfig, count_active_params, count_params,  # noqa
+                          decode_step, forward, init_cache, init_params,
+                          loss_fn)

@@ -1,0 +1,42 @@
+"""AlexNet (paper Table I) as a CNNLab application.
+
+The network is declared as layer tuples (core.layer_model.alexnet_full_spec),
+scheduled by the CNNLab middleware onto execution engines, and compiled into
+one jit program.  This is the paper's own experimental model, used by
+examples/cnnlab_alexnet.py and the Fig. 6 benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core import engines as eng
+from ..core import plan as plan_lib
+from ..core import scheduler as sched
+from ..core.layer_model import NetworkSpec, alexnet_full_spec
+
+
+class AlexNet:
+    """Schedulable AlexNet.  objective/engines pick the execution mapping."""
+
+    def __init__(self, *, objective: str = "latency",
+                 engines: Sequence[eng.ExecutionEngine] = eng.DEFAULT_ENGINES,
+                 net: Optional[NetworkSpec] = None):
+        self.net = net or alexnet_full_spec()
+        self.plan = sched.schedule(self.net, engines, objective=objective)
+        self._apply = plan_lib.compile_plan(self.plan)
+
+    def init(self, key: jax.Array, dtype=jnp.float32) -> List[Dict]:
+        return plan_lib.init_network_params(self.net, key, dtype)
+
+    def __call__(self, x: jax.Array, params: List[Dict]) -> jax.Array:
+        return self._apply(x, params)
+
+    def loss(self, params: List[Dict], x: jax.Array,
+             labels: jax.Array) -> jax.Array:
+        probs = self._apply(x, params)
+        logp = jnp.log(jnp.maximum(probs, 1e-9))
+        return -jnp.mean(
+            jnp.take_along_axis(logp, labels[:, None], axis=1))

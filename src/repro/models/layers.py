@@ -1,0 +1,86 @@
+"""Shared model layers: norms, RoPE, embeddings, losses, init helpers.
+
+Everything is a pure function over explicit param pytrees (no flax) so the
+same code paths serve jit/pjit tracing, eval_shape-based abstract init for
+the dry-run, and checkpointing.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal_init(key, shape, scale: float, dtype=jnp.float32):
+    # abstract-safe: works under eval_shape
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) \
+        .astype(dtype) * scale
+
+
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def layernorm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+              eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def rope_freqs(head_dim: int, theta: float = 1e4) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e4
+               ) -> jax.Array:
+    """x: (..., S, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, D/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    h = jax.nn.silu(jnp.dot(x, w_gate.astype(compute_dtype))) * jnp.dot(
+        x, w_up.astype(compute_dtype))
+    return jnp.dot(h, w_down.astype(compute_dtype))
+
+
+def gelu_mlp(x: jax.Array, w_in: jax.Array, b_in: Optional[jax.Array],
+             w_out: jax.Array, b_out: Optional[jax.Array],
+             compute_dtype=jnp.bfloat16) -> jax.Array:
+    h = jnp.dot(x, w_in.astype(compute_dtype))
+    if b_in is not None:
+        h = h + b_in.astype(compute_dtype)
+    h = jax.nn.gelu(h)
+    out = jnp.dot(h, w_out.astype(compute_dtype))
+    if b_out is not None:
+        out = out + b_out.astype(compute_dtype)
+    return out
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token CE.  logits: (..., V) fp32-upcast; labels: int (...)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

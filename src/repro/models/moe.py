@@ -1,0 +1,127 @@
+"""Mixture-of-Experts FFN (mixtral, phi3.5-moe) with expert parallelism.
+
+Capacity-based routing (GShard semantics: per-sequence capacity, over-cap
+tokens dropped) implemented with scatter/gather instead of the classic
+one-hot dispatch einsum:
+
+    slot(token, k) = expert_id · C + position-within-expert
+    buffers        = segment-sum of tokens into (B, E·C, D)
+    experts        = batched FFN over (E, B, C, D)
+    output         = gather back + gate-weighted sum over k
+
+The classic einsum dispatch materializes a (B, S, E, C) tensor — O(B·S²)
+memory and ~12% extra FLOPs at S=4k; the scatter form is linear in S and
+adds no matmul FLOPs, so HLO FLOPs ≈ active expert FLOPs (clean 'useful
+ratio' in §Roofline).  Experts shard over 'model' when E divides the axis
+(phi3.5: 16e); otherwise d_ff shards over 'model' (mixtral: 8e on 16).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEArgs:
+    d_model: int
+    d_ff: int
+    n_experts: int
+    top_k: int = 2
+    capacity_factor: float = 1.25
+
+
+def init_moe_params(key: jax.Array, args: MoEArgs,
+                    dtype=jnp.float32) -> Dict[str, jax.Array]:
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    e, d, f = args.n_experts, args.d_model, args.d_ff
+    s_in = (2.0 / d) ** 0.5
+    s_out = (2.0 / f) ** 0.5
+    return {
+        "router": (jax.random.normal(kr, (d, e), jnp.float32) * s_in).astype(dtype),
+        "w_gate": (jax.random.normal(kg, (e, d, f), jnp.float32) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(ku, (e, d, f), jnp.float32) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(kd, (e, f, d), jnp.float32) * s_out).astype(dtype),
+    }
+
+
+def capacity(args: MoEArgs, seq: int) -> int:
+    c = int(seq * args.top_k / args.n_experts * args.capacity_factor)
+    return max(8, ((c + 7) // 8) * 8)  # 8-aligned for TPU lanes
+
+
+def _hint(t: jax.Array, batch_axes, dim: int):
+    """Pin the batch dim of an MoE buffer: GSPMD's scatter sharding rules
+    lose the batch shard through segment_sum (measured: expert buffers
+    replicated to the full global batch, +30 GB/device on mixtral train)."""
+    if batch_axes is None:
+        return t
+    from jax.sharding import PartitionSpec as P
+    spec = [None] * t.ndim
+    spec[dim] = batch_axes
+    return jax.lax.with_sharding_constraint(t, P(*spec))
+
+
+def moe_apply(params: Dict[str, jax.Array], x: jax.Array, args: MoEArgs,
+              compute_dtype=jnp.bfloat16, batch_axes=None) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    e, k = args.n_experts, args.top_k
+    cap = capacity(args, s)
+    n_slots = e * cap
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)             # (B, S, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # position of each routing slot within its expert's capacity buffer,
+    # counted over the flattened (S·K) slots of each sequence
+    onehot = jax.nn.one_hot(gate_idx.reshape(b, s * k), e,
+                            dtype=jnp.int32)                  # (B, S·K, E)
+    pos = jnp.cumsum(onehot, axis=1) - onehot                 # (B, S·K, E)
+    pos_sel = jnp.sum(pos * onehot, axis=-1)                  # (B, S·K)
+    keep = pos_sel < cap
+    flat_idx = gate_idx.reshape(b, s * k) * cap + pos_sel     # (B, S·K)
+    flat_idx = jnp.where(keep, flat_idx, n_slots)             # dump slot
+
+    # scatter tokens into expert buffers: (B, E·C(+dump), D)
+    src = jnp.broadcast_to(x[:, :, None, :], (b, s, k, d)) \
+        .reshape(b, s * k, d).astype(compute_dtype)
+    seg = jax.vmap(functools.partial(jax.ops.segment_sum,
+                                     num_segments=n_slots + 1))
+    buf = _hint(seg(src, flat_idx)[:, :n_slots], batch_axes, 0)  # (B, E·C, D)
+    xin = buf.reshape(b, e, cap, d).transpose(1, 0, 2, 3)     # (E, B, C, D)
+    xin = _hint(xin, batch_axes, 1)
+
+    h = jax.nn.silu(jnp.einsum("ebcd,edf->ebcf", xin,
+                               params["w_gate"].astype(compute_dtype)))
+    h = h * jnp.einsum("ebcd,edf->ebcf", xin,
+                       params["w_up"].astype(compute_dtype))
+    h = _hint(h, batch_axes, 1)
+    y = jnp.einsum("ebcf,efd->ebcd", h,
+                   params["w_down"].astype(compute_dtype))    # (E, B, C, D)
+    y = _hint(y, batch_axes, 1)
+
+    # gather back and gate-combine (dropped slots read the zero dump row)
+    y_flat = y.transpose(1, 0, 2, 3).reshape(b, n_slots, d)
+    y_flat = jnp.concatenate(
+        [y_flat, jnp.zeros((b, 1, d), y_flat.dtype)], axis=1)
+    tok = jnp.take_along_axis(y_flat, flat_idx[..., None], axis=1)  # (B,S·K,D)
+    w = (gate_vals.reshape(b, s * k) * keep).astype(compute_dtype)
+    out = jnp.sum(tok.reshape(b, s, k, d) * w.reshape(b, s, k, 1), axis=2)
+    return out.astype(x.dtype)
+
+
+def aux_load_balance_loss(logits: jax.Array, gate_idx: jax.Array,
+                          n_experts: int) -> jax.Array:
+    """Switch-style auxiliary loss: E · Σ_e f_e · P_e."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    p_mean = probs.mean(axis=(0, 1))
+    f = jax.nn.one_hot(gate_idx[..., 0], n_experts).mean(axis=(0, 1))
+    return n_experts * jnp.sum(f * p_mean)

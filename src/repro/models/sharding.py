@@ -1,0 +1,304 @@
+"""Logical-axis sharding rules → NamedSharding, with divisibility fallbacks.
+
+The production mesh is (data=16, model=16) per pod, with an outer 'pod' axis
+across pods.  Policy:
+
+* **TP mode** (head count divides the 'model' axis): heads/d_ff/experts
+  shard over 'model'; batch over ('pod','data'); params FSDP over 'data'
+  on their d_model/vocab dimension (ZeRO-style).
+* **FSDP/SP mode** (heads don't divide — deepseek 56H, minicpm 36H, qwen2
+  12H, recurrentgemma 10H): activations shard *sequence* over 'model'
+  (context parallelism — compute stays balanced on every chip), params
+  shard over both 'data' and 'model' purely for storage, and XLA GSPMD
+  inserts the per-layer all-gathers (ZeRO-3 semantics).
+
+Every rule is a *priority list* of mesh axes; the resolver takes the first
+candidate whose size divides the dimension and that isn't already used by
+another dimension of the same array — this is what makes all 40
+(arch × shape) cells lower with zero per-cell hand-tuning (e.g. mixtral's
+8 kv-heads on a 16-way axis fall back to replicated kv, granite's kv=1
+likewise, phi3.5's 16 experts take 'model' for true EP).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .transformer import ModelConfig
+
+PyTree = Any
+
+# logical axis -> ordered candidate mesh-axis tuples ((..) may fuse axes)
+RULES: Dict[str, Sequence[Tuple[str, ...]]] = {
+    "batch":      [("pod", "data"), ("data",), ("pod",), ()],
+    "seq":        [("model",), ()],          # only consulted in fsdp/sp mode
+    "heads":      [("model",), ()],
+    "kv_heads":   [("model",), ()],
+    "ff":         [("model",), ()],
+    "expert":     [("model",), ()],
+    "d_inner":    [("model",), ()],
+    "vocab":      [("model",), ()],
+    "embed":      [("data",), ()],            # param FSDP dim
+    "embed2":     [("model",), ()],            # ZeRO-3 second storage dim
+    "cache_time": [("model",), ()],
+    "cache_batch": [("data",), ("pod",), ()],
+    "replicated": [()],
+}
+
+# resolution priority: most contended axes first
+_PRIORITY = ["expert", "heads", "kv_heads", "ff", "d_inner", "vocab", "seq",
+             "cache_time", "batch", "cache_batch", "embed", "embed2",
+             "replicated"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: Mesh
+    tp_mode: bool          # True -> TP; False -> FSDP/SP fallback
+    zero3: bool = False    # shard params over 'model' too (fsdp mode)
+    # SSM archs: the recurrence is sequential in S, so sequence sharding
+    # would serialize across shards — instead shard batch over the WHOLE
+    # mesh (pure DP + ZeRO storage).  train_4k's batch=256 covers all 256
+    # chips of a pod exactly.
+    pure_dp: bool = False
+
+    def axis_size(self, name: str) -> int:
+        return self.mesh.shape.get(name, 1)
+
+    def resolve(self, shape: Tuple[int, ...],
+                names: Sequence[Optional[str]]) -> P:
+        assert len(shape) == len(names), (shape, names)
+        chosen: Dict[int, Tuple[str, ...]] = {}
+        used: set = set()
+        order = sorted(range(len(names)),
+                       key=lambda i: _PRIORITY.index(names[i])
+                       if names[i] in _PRIORITY else 99)
+        for i in order:
+            ln = names[i]
+            if ln is None or ln not in RULES:
+                continue
+            # 'seq' shards over 'model' in both attention modes (Megatron-
+            # style sequence parallelism on the residual stream: the scan
+            # carry is (B, S/16, D) instead of (B, S, D); attention/FFN
+            # internals re-shard per the param specs and GSPMD inserts the
+            # boundary all-gather / reduce-scatter pairs)
+            if ln == "embed2" and not self.zero3:
+                continue
+            rules = RULES[ln]
+            if self.pure_dp:
+                if ln == "seq":
+                    continue
+                if ln == "batch":
+                    rules = [("pod", "data", "model"), ("data", "model"),
+                             ("pod", "data"), ("data",), ()]
+            for cand in rules:
+                if not cand:
+                    break                                   # explicit no-shard
+                if any(a not in self.mesh.shape for a in cand):
+                    continue                                # axis not in mesh
+                if any(a in used for a in cand):
+                    continue                                # axis taken
+                size = 1
+                for a in cand:
+                    size *= self.mesh.shape[a]
+                if size > 1 and shape[i] % size == 0:
+                    chosen[i] = cand
+                    used.update(cand)
+                    break
+        parts = []
+        for i in range(len(shape)):
+            c = chosen.get(i, ())
+            parts.append(c[0] if len(c) == 1 else (c if c else None))
+        return P(*parts)
+
+    def named(self, shape: Tuple[int, ...],
+              names: Sequence[Optional[str]]) -> NamedSharding:
+        spec = self.resolve(shape, names)
+        if not isinstance(self.mesh, Mesh):     # mocked mesh (unit tests)
+            return spec
+        return NamedSharding(self.mesh, spec)
+
+
+def make_policy(cfg: ModelConfig, mesh: Mesh) -> ShardingPolicy:
+    tp = cfg.n_heads == 0 or cfg.n_heads % mesh.shape.get("model", 1) == 0
+    pure_dp = any(t in ("mamba", "rec") for t in cfg.layer_types())
+    return ShardingPolicy(mesh=mesh, tp_mode=tp, zero3=not tp,
+                          pure_dp=pure_dp)
+
+
+# ---------------------------------------------------------------------------
+# Logical names for every param in the transformer tree
+# ---------------------------------------------------------------------------
+def _attn_names(cfg: ModelConfig, stacked: bool) -> Dict:
+    L = ["layers"] if stacked else []
+    n = {
+        "wq": L + ["embed", "heads"],
+        "wk": L + ["embed", "kv_heads"],
+        "wv": L + ["embed", "kv_heads"],
+        "wo": L + ["heads", "embed"],
+    }
+    if cfg.qkv_bias:
+        n["bq"] = L + ["heads"]
+        n["bk"] = L + ["kv_heads"]
+        n["bv"] = L + ["kv_heads"]
+    return n
+
+
+def _mlp_names(cfg: ModelConfig, stacked: bool) -> Dict:
+    L = ["layers"] if stacked else []
+    if cfg.n_experts > 0:
+        return {
+            "router": L + ["embed", "replicated"],
+            "w_gate": L + ["expert", "embed", "ff"],
+            "w_up": L + ["expert", "embed", "ff"],
+            "w_down": L + ["expert", "ff", "embed"],
+        }
+    n = {
+        "w_up": L + ["embed", "ff"],
+        "w_down": L + ["ff", "embed"],
+    }
+    if cfg.gated_mlp:
+        n["w_gate"] = L + ["embed", "ff"]
+    return n
+
+
+def _block_names(btype: str, cfg: ModelConfig, stacked: bool,
+                 with_cross: bool) -> Dict:
+    L = ["layers"] if stacked else []
+    vec = L + ["replicated"]
+    if btype == "attn":
+        n = {"ln1": vec, "attn": _attn_names(cfg, stacked), "ln2": vec,
+             "mlp": _mlp_names(cfg, stacked)}
+        if with_cross:
+            n["lnx"] = vec
+            n["xattn"] = _attn_names(cfg, stacked)
+        return n
+    if btype == "xattn":
+        return {"ln1": vec, "xattn": _attn_names(cfg, stacked), "ln2": vec,
+                "mlp": _mlp_names(cfg, stacked),
+                "gate_attn": list(L), "gate_mlp": list(L)}
+    if btype == "rec":
+        return {"ln1": vec,
+                "rec": {
+                    "x_proj": L + ["embed", "d_inner"],
+                    "gate_proj": L + ["embed", "d_inner"],
+                    "conv_w": L + ["replicated", "d_inner"],
+                    "conv_b": L + ["d_inner"],
+                    "w_a": L + ["embed2", "d_inner"],
+                    "b_a": L + ["d_inner"],
+                    "w_i": L + ["embed2", "d_inner"],
+                    "b_i": L + ["d_inner"],
+                    "lambda": L + ["d_inner"],
+                    "out_proj": L + ["d_inner", "embed"],
+                },
+                "ln2": vec, "mlp": _mlp_names(cfg, stacked)}
+    if btype == "mamba":
+        return {"ln1": vec,
+                "mamba": {
+                    "in_proj": L + ["embed", "d_inner"],
+                    "conv_w": L + ["replicated", "d_inner"],
+                    "conv_b": L + ["d_inner"],
+                    "x_proj": L + ["d_inner", "replicated"],
+                    "dt_proj": L + ["replicated", "d_inner"],
+                    "dt_bias": L + ["d_inner"],
+                    "A_log": L + ["d_inner", "replicated"],
+                    "D": L + ["d_inner"],
+                    "out_proj": L + ["d_inner", "embed"],
+                }}
+    raise ValueError(btype)
+
+
+def _stack_names(cfg: ModelConfig, with_cross: bool) -> Dict:
+    unit = cfg.pattern_unit()
+    return {
+        "blocks": tuple(_block_names(b, cfg, True, with_cross) for b in unit),
+        "rem": tuple(_block_names(unit[i % len(unit)], cfg, False, with_cross)
+                     for i in range(cfg.n_rem)),
+    }
+
+
+def param_logical_names(cfg: ModelConfig) -> Dict:
+    names: Dict[str, Any] = {
+        "embed": ["vocab", "embed"],
+        "final_norm": ["replicated"],
+        "decoder": _stack_names(cfg, with_cross=cfg.encoder_decoder),
+    }
+    if not cfg.tie_embeddings:
+        names["lm_head"] = ["embed", "vocab"]
+    if cfg.encoder_decoder:
+        enc_cfg = dataclasses.replace(
+            cfg, n_layers=cfg.enc_layers or cfg.n_layers,
+            block_pattern=("attn",), cross_attn_every=0, encoder_decoder=False)
+        names["encoder"] = _stack_names(enc_cfg, with_cross=False)
+        names["enc_final_norm"] = ["replicated"]
+    return names
+
+
+def _tree_shardings(tree_shapes: PyTree, tree_names: PyTree,
+                    policy: ShardingPolicy) -> PyTree:
+    def leafify(shape_leaf, names_leaf):
+        shape = tuple(shape_leaf.shape)
+        names = list(names_leaf)
+        # leading 'layers' dim is the scan axis: never sharded
+        resolved_names = [None if n == "layers" else n for n in names]
+        # pad/truncate to rank (scalars, ())
+        resolved_names = (resolved_names + [None] * len(shape))[:len(shape)]
+        return policy.named(shape, resolved_names)
+
+    return jax.tree.map(leafify, tree_shapes, tree_names)
+
+
+def param_shardings(cfg: ModelConfig, policy: ShardingPolicy,
+                    param_shapes: PyTree) -> PyTree:
+    names = param_logical_names(cfg)
+    return _tree_shardings(param_shapes, names, policy)
+
+
+def batch_shardings(cfg: ModelConfig, policy: ShardingPolicy,
+                    batch_shapes: Dict[str, Any]) -> Dict[str, Any]:
+    out = {}
+    for k, v in batch_shapes.items():
+        if k in ("tokens", "labels", "mask"):
+            out[k] = policy.named(tuple(v.shape), ["batch", "seq"])
+        elif k in ("enc_inputs", "img_embeds"):
+            out[k] = policy.named(tuple(v.shape), ["batch", "seq", None])
+        else:
+            out[k] = policy.named(tuple(v.shape), [None] * len(v.shape))
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, policy: ShardingPolicy,
+                    cache_shapes: PyTree) -> PyTree:
+    """Caches: kv (L?, B, HK, T, D) — kv_heads over 'model' when divisible,
+    else time over 'model'; batch over 'data'.  SSM states: d_inner over
+    'model'.  Dispatches on the leaf's key name in the cache pytree."""
+    def leaf(path, x):
+        shape = tuple(x.shape)
+        rank = len(shape)
+        key = ""
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                key = p.key
+                break
+        if key in ("k", "v") and rank >= 4:
+            lead = [None] * (rank - 4)
+            return policy.named(shape, lead + ["cache_batch", "kv_heads",
+                                               "cache_time", None])
+        if key == "h" and rank >= 3 and shape[-1] == cfg.ssm_state:
+            lead = [None] * (rank - 3)
+            return policy.named(shape, lead + ["cache_batch", "d_inner", None])
+        if key == "h" and rank >= 2:                       # rglru (B, DI)
+            lead = [None] * (rank - 2)
+            return policy.named(shape, lead + ["cache_batch", "d_inner"])
+        if key == "conv" and rank >= 3:                    # (B, K-1, DI)
+            lead = [None] * (rank - 3)
+            return policy.named(shape, lead + ["cache_batch", None, "d_inner"])
+        if key == "cross" and rank == 3:                   # (B, T, D)
+            return policy.named(shape, ["cache_batch", "seq", None])
+        return policy.named(shape, [None] * rank)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shapes)

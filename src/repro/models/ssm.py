@@ -1,0 +1,289 @@
+"""State-space blocks: Mamba-1 (falcon-mamba) and RG-LRU (recurrentgemma).
+
+TPU adaptation of the CUDA selective-scan: a *chunked associative scan* —
+sequential `lax.scan` over length-`chunk` segments (so the (B, L, d_inner,
+d_state) tensor is never materialized; peak transient is (B, chunk, d_inner,
+d_state)), with `jax.lax.associative_scan` inside each segment for
+log-depth parallelism on the VPU, and `jax.checkpoint` on the segment body
+so the backward pass recomputes segment internals from the carried state —
+the same recompute trade the CUDA kernel makes.
+
+Both recurrences are diagonal, so d_inner shards over the 'model' mesh axis
+with zero collectives inside the scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MambaArgs:
+    d_model: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return math.ceil(self.d_model / 16)
+
+
+def init_mamba_params(key: jax.Array, args: MambaArgs,
+                      dtype=jnp.float32) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 6)
+    d, di, n, r = args.d_model, args.d_inner, args.d_state, args.dt_rank
+    s = (2.0 / d) ** 0.5
+    a = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (args.d_conv, di)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": (jax.random.normal(ks[2], (di, r + 2 * n)) * (2.0 / di) ** 0.5).astype(dtype),
+        "dt_proj": (jax.random.normal(ks[3], (r, di)) * (2.0 / r) ** 0.5).astype(dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),   # softplus^-1(0.01)
+        "A_log": jnp.log(a).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": (jax.random.normal(ks[4], (di, d)) * (2.0 / di) ** 0.5).astype(dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over L.  x: (B, L, DI); w: (K, DI).
+    `state`: (B, K-1, DI) trailing context from the previous call (decode).
+    Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)          # (B, L+K-1, DI)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):, :]
+    return y + b, new_state
+
+
+def _segment_scan(dA: jax.Array, dBx: jax.Array, h0: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Diagonal linear recurrence h_t = dA_t h_{t-1} + dBx_t over axis 1.
+    dA/dBx: (B, C, DI, N); h0: (B, DI, N).  Returns (h_all, h_last)."""
+    def combine(a, b):
+        a_a, a_b = a
+        b_a, b_b = b
+        return (b_a * a_a, b_a * a_b + b_b)
+    aa, hh = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    h_all = hh + aa * h0[:, None]
+    return h_all, h_all[:, -1]
+
+
+def mamba_apply(params: Dict[str, jax.Array], x: jax.Array, args: MambaArgs,
+                compute_dtype=jnp.bfloat16, return_state: bool = False):
+    """x: (B, L, D) -> (B, L, D); full-sequence (training / prefill body).
+    With return_state, also returns the decode state (h, conv) so prefill
+    hands a serve-ready cache to decode_step."""
+    b, L, d = x.shape
+    di, n, r = args.d_inner, args.d_state, args.dt_rank
+    xz = jnp.dot(x.astype(compute_dtype), params["in_proj"].astype(compute_dtype))
+    xc_pre, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(xc_pre,
+                                  params["conv_w"].astype(compute_dtype),
+                                  params["conv_b"].astype(compute_dtype))
+    xc = jax.nn.silu(xc)
+
+    dbc = jnp.dot(xc, params["x_proj"].astype(compute_dtype))
+    dt, Bm, Cm = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.dot(dt, params["dt_proj"].astype(compute_dtype))
+        + params["dt_bias"].astype(compute_dtype)).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))        # (DI, N)
+
+    chunk = min(args.chunk, L)
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+
+    def seg(h0, inp):
+        xc_c, dt_c, B_c, C_c = inp                           # (B, C, ...)
+        dA = jnp.exp(dt_c[..., None] * A)                    # (B, C, DI, N)
+        dBx = (dt_c * xc_c.astype(jnp.float32))[..., None] * \
+            B_c.astype(jnp.float32)[:, :, None, :]
+        h_all, h_last = _segment_scan(dA, dBx, h0)
+        y = jnp.einsum("bcdn,bcn->bcd", h_all,
+                       C_c.astype(jnp.float32))              # (B, C, DI)
+        return h_last, y.astype(compute_dtype)
+
+    seg = jax.checkpoint(seg)
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    xs = (xc.reshape(b, nc, chunk, di).swapaxes(0, 1),
+          dt.reshape(b, nc, chunk, di).swapaxes(0, 1),
+          Bm.reshape(b, nc, chunk, n).swapaxes(0, 1),
+          Cm.reshape(b, nc, chunk, n).swapaxes(0, 1))
+    h_last, ys = jax.lax.scan(seg, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(b, L, di)
+    y = y + params["D"].astype(compute_dtype) * xc
+    y = y * jax.nn.silu(z)
+    out = jnp.dot(y, params["out_proj"].astype(compute_dtype)).astype(x.dtype)
+    if return_state:
+        return out, {"h": h_last,
+                     "conv": conv_state.astype(jnp.bfloat16)}
+    return out
+
+
+def mamba_init_state(args: MambaArgs, batch: int) -> Dict[str, jax.Array]:
+    return {
+        "h": jnp.zeros((batch, args.d_inner, args.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, args.d_conv - 1, args.d_inner), jnp.bfloat16),
+    }
+
+
+def mamba_step(params: Dict[str, jax.Array], x: jax.Array,
+               state: Dict[str, jax.Array], args: MambaArgs,
+               compute_dtype=jnp.bfloat16
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token decode.  x: (B, 1, D)."""
+    r, n = args.dt_rank, args.d_state
+    xz = jnp.dot(x.astype(compute_dtype), params["in_proj"].astype(compute_dtype))
+    xc, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(
+        xc, params["conv_w"].astype(compute_dtype),
+        params["conv_b"].astype(compute_dtype),
+        state["conv"].astype(compute_dtype))
+    xc = jax.nn.silu(xc)
+    dbc = jnp.dot(xc, params["x_proj"].astype(compute_dtype))
+    dt, Bm, Cm = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.dot(dt, params["dt_proj"].astype(compute_dtype))
+        + params["dt_bias"].astype(compute_dtype)).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt[:, 0, :, None] * A)                      # (B, DI, N)
+    dBx = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * \
+        Bm[:, 0].astype(jnp.float32)[:, None, :]
+    h = dA * state["h"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0].astype(jnp.float32))[:, None]
+    y = y.astype(compute_dtype) + params["D"].astype(compute_dtype) * xc
+    y = y * jax.nn.silu(z)
+    out = jnp.dot(y, params["out_proj"].astype(compute_dtype)).astype(x.dtype)
+    return out, {"h": h, "conv": conv_state.astype(jnp.bfloat16)}
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / recurrentgemma recurrent block)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RGLRUArgs:
+    d_model: int
+    d_conv: int = 4
+    expand: int = 1       # recurrentgemma: lru_width == d_model
+    c: float = 8.0
+    chunk: int = 512
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+
+def init_rglru_params(key: jax.Array, args: RGLRUArgs,
+                      dtype=jnp.float32) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 6)
+    d, di = args.d_model, args.d_inner
+    s = (2.0 / d) ** 0.5
+    si = (2.0 / di) ** 0.5
+    # Λ init so a = σ(Λ)^c spreads over (0.9, 0.999)
+    u = jax.random.uniform(ks[5], (di,), minval=0.9, maxval=0.999)
+    lam = jnp.log(u ** (1.0 / args.c) / (1 - u ** (1.0 / args.c)))
+    return {
+        "x_proj": (jax.random.normal(ks[0], (d, di)) * s).astype(dtype),
+        "gate_proj": (jax.random.normal(ks[1], (d, di)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[2], (args.d_conv, di)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_a": (jax.random.normal(ks[3], (di, di)) * si).astype(dtype),
+        "b_a": jnp.zeros((di,), dtype),
+        "w_i": (jax.random.normal(ks[4], (di, di)) * si).astype(dtype),
+        "b_i": jnp.zeros((di,), dtype),
+        "lambda": lam.astype(dtype),
+        "out_proj": (jax.random.normal(ks[5], (di, d)) * si).astype(dtype),
+    }
+
+
+def _rglru_gates(params, xc, args, compute_dtype):
+    r = jax.nn.sigmoid(jnp.dot(xc, params["w_a"].astype(compute_dtype))
+                       + params["b_a"].astype(compute_dtype)).astype(jnp.float32)
+    i = jax.nn.sigmoid(jnp.dot(xc, params["w_i"].astype(compute_dtype))
+                       + params["b_i"].astype(compute_dtype)).astype(jnp.float32)
+    log_a1 = -jax.nn.softplus(-params["lambda"].astype(jnp.float32))  # log σ(Λ)
+    log_a = args.c * r * log_a1                                       # ≤ 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    return a, beta * i * xc.astype(jnp.float32)
+
+
+def rglru_apply(params: Dict[str, jax.Array], x: jax.Array, args: RGLRUArgs,
+                compute_dtype=jnp.bfloat16, return_state: bool = False):
+    """Full-sequence RG-LRU branch.  x: (B, L, D) -> (B, L, D)."""
+    b, L, _ = x.shape
+    xc = jnp.dot(x.astype(compute_dtype), params["x_proj"].astype(compute_dtype))
+    xc, conv_state = _causal_conv(xc, params["conv_w"].astype(compute_dtype),
+                                  params["conv_b"].astype(compute_dtype))
+    a, bx = _rglru_gates(params, xc, args, compute_dtype)
+
+    chunk = min(args.chunk, L)
+    assert L % chunk == 0
+    nc = L // chunk
+
+    def seg(h0, inp):
+        a_c, bx_c = inp
+        h_all, h_last = _segment_scan(a_c[..., None], bx_c[..., None], h0[..., None])
+        return h_last[..., 0], h_all[..., 0].astype(compute_dtype)
+
+    seg = jax.checkpoint(seg)
+    h0 = jnp.zeros((b, args.d_inner), jnp.float32)
+    xs = (a.reshape(b, nc, chunk, -1).swapaxes(0, 1),
+          bx.reshape(b, nc, chunk, -1).swapaxes(0, 1))
+    h_last, ys = jax.lax.scan(seg, h0, xs)
+    h = ys.swapaxes(0, 1).reshape(b, L, args.d_inner)
+
+    gate = jax.nn.gelu(jnp.dot(x.astype(compute_dtype),
+                               params["gate_proj"].astype(compute_dtype)))
+    y = h * gate
+    out = jnp.dot(y, params["out_proj"].astype(compute_dtype)).astype(x.dtype)
+    if return_state:
+        return out, {"h": h_last, "conv": conv_state.astype(jnp.bfloat16)}
+    return out
+
+
+def rglru_init_state(args: RGLRUArgs, batch: int) -> Dict[str, jax.Array]:
+    return {
+        "h": jnp.zeros((batch, args.d_inner), jnp.float32),
+        "conv": jnp.zeros((batch, args.d_conv - 1, args.d_inner), jnp.bfloat16),
+    }
+
+
+def rglru_step(params: Dict[str, jax.Array], x: jax.Array,
+               state: Dict[str, jax.Array], args: RGLRUArgs,
+               compute_dtype=jnp.bfloat16
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token decode.  x: (B, 1, D)."""
+    xc = jnp.dot(x.astype(compute_dtype), params["x_proj"].astype(compute_dtype))
+    xc, conv_state = _causal_conv(
+        xc, params["conv_w"].astype(compute_dtype),
+        params["conv_b"].astype(compute_dtype),
+        state["conv"].astype(compute_dtype))
+    a, bx = _rglru_gates(params, xc, args, compute_dtype)
+    h = a[:, 0] * state["h"] + bx[:, 0]
+    gate = jax.nn.gelu(jnp.dot(x.astype(compute_dtype),
+                               params["gate_proj"].astype(compute_dtype)))
+    y = h[:, None].astype(compute_dtype) * gate
+    out = jnp.dot(y, params["out_proj"].astype(compute_dtype)).astype(x.dtype)
+    return out, {"h": h, "conv": conv_state.astype(jnp.bfloat16)}

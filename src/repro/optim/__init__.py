@@ -1,0 +1,7 @@
+"""Optimizer substrate: AdamW, LR schedules (cosine + minicpm's WSD),
+gradient accumulation, and int8 gradient compression with error feedback."""
+from .adamw import (AdamWState, adamw_init, adamw_update, clip_by_global_norm,  # noqa
+                    make_optimizer)
+from .schedules import constant, cosine_schedule, wsd_schedule  # noqa
+from .compression import (compress_int8, decompress_int8,  # noqa
+                          compressed_allreduce_update)

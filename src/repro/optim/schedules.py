@@ -1,0 +1,41 @@
+"""Learning-rate schedules.
+
+Includes WSD (Warmup-Stable-Decay) — the schedule minicpm (arXiv:2404.06395)
+trains with — as a first-class citizen since that arch is assigned.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return f
+
+
+def wsd_schedule(peak_lr: float, warmup_steps: int, stable_steps: int,
+                 decay_steps: int, final_frac: float = 0.01):
+    """Warmup-Stable-Decay (minicpm): linear warmup, long flat stage, then a
+    fast exponential-style decay to final_frac*peak over decay_steps."""
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        d0 = warmup_steps + stable_steps
+        prog = jnp.clip((step - d0) / max(decay_steps, 1), 0.0, 1.0)
+        decay = peak_lr * jnp.exp(jnp.log(final_frac) * prog)
+        out = jnp.where(step < warmup_steps, warm,
+                        jnp.where(step < d0, peak_lr, decay))
+        return out
+    return f

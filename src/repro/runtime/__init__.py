@@ -1,0 +1,3 @@
+"""Runtime substrate: straggler monitoring, preemption handling, step loop."""
+from .fault_tolerance import (PreemptionHandler, StepTimer,  # noqa
+                              StragglerReport)

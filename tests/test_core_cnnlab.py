@@ -1,0 +1,175 @@
+"""CNNLab core: layer model accounting, cost model, scheduler, plan,
+trade-off analysis vs the paper's claims (hypothesis property tests where
+invariants matter)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model, device_models as dm, engines, plan, \
+    scheduler, tradeoff
+from repro.core.layer_model import (AttentionSpec, ConvSpec, FCSpec, MLPSpec,
+                                    MoESpec, NetworkSpec, PoolSpec, SSMSpec,
+                                    alexnet_full_spec, alexnet_spec)
+
+
+# ------------------------------------------------------- FLOP accounting
+def test_table2_flop_counts_exact():
+    net = alexnet_spec()
+    fc = {l.name: l for l in net if l.kind == "fc"}
+    assert fc["FC6"].flops(1) == 75_497_472
+    assert fc["FC7"].flops(1) == 33_554_432
+    assert fc["FC8"].flops(1) == 8_192_000
+    assert fc["FC6"].bwd_flops(1) == 150_994_944
+    assert fc["FC7"].bwd_flops(1) == 67_108_864
+    assert fc["FC8"].bwd_flops(1) == 16_384_000
+
+
+def test_alexnet_conv_flops_plausible():
+    net = alexnet_spec()
+    conv_flops = sum(l.flops(1) for l in net if l.kind == "conv")
+    # AlexNet convs are ~1.07 GMAC = ~2.15 GFLOP/image (2 FLOPs/MAC)
+    assert 1.9e9 < conv_flops < 2.4e9
+
+
+@given(st.integers(1, 64), st.integers(1, 512), st.integers(1, 512))
+@settings(max_examples=30, deadline=None)
+def test_fc_flops_formula(batch, n_in, k_o):
+    spec = FCSpec("fc", m_i=(n_in,), k_o=k_o)
+    assert spec.flops(batch) == 2 * batch * n_in * k_o
+    assert spec.bwd_flops(batch) == 2 * spec.flops(batch)
+
+
+@given(st.integers(1, 8))
+@settings(max_examples=10, deadline=None)
+def test_flops_linear_in_batch(batch):
+    for spec in alexnet_full_spec():
+        assert spec.flops(batch) == batch * spec.flops(1)
+
+
+def test_moe_flops_only_counts_active_experts():
+    dense = MLPSpec("mlp", d_model=64, d_ff=256, seq=32, gated=True)
+    moe = MoESpec("moe", d_model=64, d_ff=256, seq=32, n_experts=8, top_k=2)
+    # top-2 of 8 experts ~= 2x the dense MLP (+ router)
+    assert moe.flops(1) < 2 * dense.flops(1) + 2 * 32 * 64 * 8 + 1
+    assert moe.flops(1) >= 2 * dense.flops(1)
+
+
+# ----------------------------------------------------------- cost model
+@given(st.sampled_from(["conv", "fc"]), st.integers(1, 200))
+@settings(max_examples=30, deadline=None)
+def test_cost_monotone_in_batch(kind, batch):
+    spec = (ConvSpec("c", m_i=(27, 27, 96), m_k=(64, 96, 5, 5),
+                     m_o=(27, 27, 64)) if kind == "conv"
+            else FCSpec("f", m_i=(4096,), k_o=1024))
+    c1 = cost_model.layer_cost(spec, dm.K40, batch=batch)
+    c2 = cost_model.layer_cost(spec, dm.K40, batch=batch + 1)
+    assert c2.t_total > c1.t_total
+    assert c2.energy_j > c1.energy_j
+
+
+def test_roofline_terms_analytic_device():
+    spec = FCSpec("f", m_i=(4096,), k_o=4096)
+    c = cost_model.layer_cost(spec, dm.TPU_V5E, batch=1, dtype_bytes=4)
+    # batch-1 FC is memory-bound on any modern chip
+    assert c.dominant == "memory"
+    c_big = cost_model.layer_cost(spec, dm.TPU_V5E, batch=8192, dtype_bytes=2)
+    assert c_big.dominant == "compute"
+
+
+def test_collective_term():
+    spec = FCSpec("f", m_i=(4096,), k_o=4096)
+    c = cost_model.layer_cost(spec, dm.TPU_V5E, batch=4,
+                              collective_bytes=10 * 2**30)
+    assert c.dominant == "collective"
+    assert c.t_collective == pytest.approx(10 * 2**30 / dm.TPU_V5E.link_bw)
+
+
+# ------------------------------------------------------------ scheduler
+def test_scheduler_greedy_matches_exhaustive():
+    net = NetworkSpec("sub", tuple(alexnet_full_spec())[:5])
+    engs = engines.ALL_ENGINES
+    for objective in cost_model.OBJECTIVES:
+        g = scheduler.schedule(net, engs, objective=objective)
+        e = scheduler.schedule_exhaustive(net, engs, objective=objective)
+        assert g.total_objective() == pytest.approx(e.total_objective()), \
+            objective
+
+
+def test_scheduler_latency_prefers_gpu_power_prefers_fpga():
+    net = alexnet_spec()
+    lat = scheduler.schedule(net, engines.PAPER_ENGINES, objective="latency")
+    pow_ = scheduler.schedule(net, engines.PAPER_ENGINES, objective="power")
+    assert all(a.engine == "k40" for a in lat.assignments)
+    assert all(a.engine == "de5-opencl" for a in pow_.assignments)
+
+
+def test_scheduler_power_cap():
+    net = alexnet_spec()
+    capped = scheduler.schedule(net, engines.PAPER_ENGINES,
+                                objective="latency", power_cap_w=10.0)
+    assert capped.peak_power <= 10.0
+    uncapped = scheduler.schedule(net, engines.PAPER_ENGINES,
+                                  objective="latency")
+    assert uncapped.total_time < capped.total_time
+
+
+@given(st.sampled_from(["latency", "energy", "edp"]))
+@settings(max_examples=5, deadline=None)
+def test_plan_objective_is_minimal_per_layer(objective):
+    """Property: no single-layer engine swap can improve the plan."""
+    net = alexnet_spec()
+    p = scheduler.schedule(net, engines.ALL_ENGINES, objective=objective)
+    for a in p.assignments:
+        for eng in engines.ALL_ENGINES:
+            if not eng.supports(a.spec):
+                continue
+            eff = eng.efficiency if eng.device.analytic else 1.0
+            alt = cost_model.layer_cost(a.spec, eng.device, batch=1,
+                                        mxu_efficiency=eff)
+            assert (cost_model.objective_value(a.cost, objective)
+                    <= cost_model.objective_value(alt, objective) + 1e-12)
+
+
+# ------------------------------------------------------ plan execution
+def test_compiled_plan_engines_agree(rng):
+    net = alexnet_full_spec()
+    params = plan.init_network_params(net, jax.random.PRNGKey(0))
+    x = jnp.asarray(rng.normal(size=(2, 224, 224, 3)), jnp.float32)
+    p_xla = scheduler.schedule(net, [engines.XLA_ENGINE])
+    p_pal = scheduler.schedule(net, [engines.PALLAS_ENGINE])
+    y1 = plan.compile_plan(p_xla)(x, params)
+    y2 = plan.compile_plan(p_pal)(x, params)
+    assert y1.shape == (2, 1000)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y1.sum(-1)), 1.0, rtol=1e-5)
+
+
+def test_paper_device_plan_falls_back_to_buildable_engine(rng):
+    net = NetworkSpec("fc-only", tuple(l for l in alexnet_full_spec()
+                                       if l.kind == "fc"))
+    p = scheduler.schedule(net, engines.PAPER_ENGINES, objective="latency")
+    f = plan.compile_plan(p)          # k40 is cost-only -> xla fallback
+    params = plan.init_network_params(net, jax.random.PRNGKey(0))
+    x = jnp.asarray(rng.normal(size=(2, 9216)), jnp.float32)
+    y = f(x, params)
+    assert y.shape == (2, 1000)
+    assert bool(jnp.isfinite(y).all())
+
+
+# --------------------------------------------------- paper-claim checks
+def test_paper_claims_all_pass():
+    claims = tradeoff.check_paper_claims()
+    failed = {k: v for k, v in claims.items() if not v["ok"]}
+    assert not failed, failed
+
+
+def test_tradeoff_table_shapes():
+    rows = tradeoff.analyze(alexnet_spec(), [dm.K40, dm.DE5], batch=16)
+    assert len(rows) == 2 * 8
+    for r in rows:
+        assert r.time_s > 0 and r.throughput_gflops > 0
+        assert r.gflops_per_watt == pytest.approx(
+            r.throughput_gflops / r.power_w)

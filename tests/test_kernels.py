@@ -1,0 +1,141 @@
+"""Per-kernel correctness: sweep shapes x dtypes, assert_allclose vs the
+pure-jnp oracles in kernels/ref.py.  All Pallas kernels run interpret=True
+(CPU container; TPU is the lowering target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+_RTOL = {jnp.float32: 2e-4, jnp.bfloat16: 5e-2}
+_ATOL = {jnp.float32: 2e-4, jnp.bfloat16: 5e-2}
+
+
+def _assert_close(got, want, dtype):
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=_RTOL[dtype], atol=_ATOL[dtype])
+
+
+# ---------------------------------------------------------------- matmul
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n", [
+    (128, 128, 128),        # single tile
+    (256, 512, 256),        # multi-tile all dims
+    (100, 300, 70),         # unaligned (padding path)
+    (1, 9216, 4096),        # FC6 row (paper Table II)
+    (8, 64, 8),             # tiny
+])
+def test_matmul_shapes(rng, m, k, n, dtype):
+    x = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    w = jnp.asarray(rng.normal(size=(k, n)), dtype)
+    _assert_close(ops.matmul(x, w), ref.matmul_ref(x, w), dtype)
+
+
+@pytest.mark.parametrize("activation", ["none", "relu", "sigmoid", "tanh"])
+def test_matmul_bias_activation(rng, activation):
+    x = jnp.asarray(rng.normal(size=(64, 96)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(96, 48)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(48,)), jnp.float32)
+    _assert_close(ops.matmul(x, w, b, activation=activation),
+                  ref.fc_ref(x, w, b, activation=activation), jnp.float32)
+
+
+def test_matmul_block_sweep(rng):
+    x = jnp.asarray(rng.normal(size=(512, 384)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(384, 256)), jnp.float32)
+    want = ref.matmul_ref(x, w)
+    for bm, bn, bk in [(128, 128, 128), (256, 256, 384), (512, 64, 192)]:
+        got = ops.matmul(x, w, block_m=bm, block_n=bn, block_k=bk)
+        _assert_close(got, want, jnp.float32)
+
+
+# ---------------------------------------------------------------- conv2d
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("hw,cin,cout,kk,stride,pad", [
+    (16, 3, 8, 3, 1, 1),
+    (16, 4, 8, 3, 2, 0),
+    (24, 3, 16, 5, 2, 2),
+    (13, 8, 16, 3, 1, 1),      # conv3-5 geometry (reduced channels)
+    (12, 3, 8, 11, 4, 2),      # conv1 geometry (reduced)
+])
+def test_conv2d_shapes(rng, hw, cin, cout, kk, stride, pad, dtype):
+    x = jnp.asarray(rng.normal(size=(2, hw, hw, cin)), dtype)
+    w = jnp.asarray(rng.normal(size=(cout, cin, kk, kk)), dtype)
+    b = jnp.asarray(rng.normal(size=(cout,)), dtype)
+    got = ops.conv2d(x, w, b, stride=stride, padding=pad, activation="relu")
+    want = ref.conv2d_ref(x, w, b, stride=stride, padding=pad,
+                          activation="relu")
+    _assert_close(got, want, dtype)
+
+
+# --------------------------------------------------------------- pooling
+@pytest.mark.parametrize("pool_type", ["max", "avg"])
+@pytest.mark.parametrize("hw,c,win,stride", [
+    (13, 8, 3, 2), (27, 4, 3, 2), (8, 16, 2, 2), (9, 3, 3, 3),
+])
+def test_pool_shapes(rng, hw, c, win, stride, pool_type):
+    x = jnp.asarray(rng.normal(size=(2, hw, hw, c)), jnp.float32)
+    got = ops.pool(x, window=win, stride=stride, pool_type=pool_type)
+    want = (ref.maxpool_ref(x, window=win, stride=stride) if pool_type == "max"
+            else ref.avgpool_ref(x, window=win, stride=stride))
+    _assert_close(got, want, jnp.float32)
+
+
+# ------------------------------------------------------------------ lrn
+@pytest.mark.parametrize("c,local", [(8, 5), (16, 3), (96, 5), (7, 5)])
+def test_lrn_shapes(rng, c, local):
+    x = jnp.asarray(rng.normal(size=(2, 7, 7, c)), jnp.float32)
+    got = ops.lrn(x, local_size=local)
+    want = ref.lrn_ref(x, local_size=local)
+    _assert_close(got, want, jnp.float32)
+
+
+# ------------------------------------------------------ flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("hq,hk", [(8, 8), (8, 2), (4, 1)])
+def test_flash_attention_gqa(rng, hq, hk, dtype):
+    q = jnp.asarray(rng.normal(size=(2, hq, 256, 64)), dtype)
+    k = jnp.asarray(rng.normal(size=(2, hk, 256, 64)), dtype)
+    v = jnp.asarray(rng.normal(size=(2, hk, 256, 64)), dtype)
+    got = ops.flash_attention(q, k, v, causal=True, block_q=128, block_k=128)
+    want = ref.attention_ref(q, k, v, causal=True)
+    _assert_close(got, want, jnp.bfloat16)   # online softmax: bf16-level tol
+
+
+@pytest.mark.parametrize("window", [32, 64, 250])
+def test_flash_attention_windowed(rng, window):
+    q = jnp.asarray(rng.normal(size=(1, 4, 256, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 32)), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=64, block_k=64)
+    want = ref.attention_ref(q, k, v, causal=True, window=window)
+    _assert_close(got, want, jnp.bfloat16)
+
+
+def test_flash_attention_unaligned_padding():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 2, 100, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 100, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 100, 32)), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    want = ref.attention_ref(q, k, v, causal=True)
+    _assert_close(got, want, jnp.bfloat16)
+
+
+def test_conv_vmem_budget():
+    """Every AlexNet conv layer's per-image working set fits 16 MiB VMEM —
+    the Table III resource-constraint analogue."""
+    from repro.core.layer_model import alexnet_full_spec
+    from repro.kernels.conv2d import conv2d_vmem_bytes
+    for spec in alexnet_full_spec():
+        if spec.kind != "conv":
+            continue
+        h, w, c = spec.m_i
+        oc, ic, kh, kw = spec.m_k
+        pad = spec.padding
+        bytes_ = conv2d_vmem_bytes(h + 2 * pad, w + 2 * pad, ic, oc, kh, kw,
+                                   spec.stride)
+        assert bytes_ < 16 * 2**20, (spec.name, bytes_)

@@ -1,0 +1,203 @@
+"""Substrate tests: data pipeline determinism/resume, optimizer math,
+schedules, gradient compression (hypothesis properties), checkpoint
+round-trip + elastic restore, fault-tolerance runtime."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager, restore_latest, \
+    save_checkpoint
+from repro.data import DataConfig, SyntheticLM, TextFileLM, make_pipeline
+from repro.optim import adamw, compression, schedules
+from repro.runtime import PreemptionHandler, StepTimer
+
+
+# ------------------------------------------------------------------ data
+def test_pipeline_deterministic_and_resumable():
+    cfg = DataConfig(global_batch=4, seq_len=16, vocab=128, seed=7)
+    p1 = SyntheticLM(cfg)
+    batches = [next(p1) for _ in range(5)]
+    state = p1.state()
+    more = [next(p1) for _ in range(3)]
+
+    p2 = SyntheticLM(cfg)
+    p2.restore(state)
+    replay = [next(p2) for _ in range(3)]
+    for a, b in zip(more, replay):
+        np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                      np.asarray(b["tokens"]))
+
+
+def test_pipeline_host_sharding_disjoint():
+    full = DataConfig(global_batch=8, seq_len=8, vocab=64, seed=3)
+    h0 = SyntheticLM(DataConfig(global_batch=8, seq_len=8, vocab=64, seed=3,
+                                host_index=0, host_count=2))
+    h1 = SyntheticLM(DataConfig(global_batch=8, seq_len=8, vocab=64, seed=3,
+                                host_index=1, host_count=2))
+    b0, b1 = next(h0), next(h1)
+    assert b0["tokens"].shape == (4, 8)
+    assert not np.array_equal(np.asarray(b0["tokens"]),
+                              np.asarray(b1["tokens"]))
+
+
+def test_pipeline_labels_are_next_tokens():
+    cfg = DataConfig(global_batch=2, seq_len=32, vocab=64, seed=1)
+    b = next(SyntheticLM(cfg))
+    # bigram data: labels[t] is the successor of tokens[t] -> shifted overlap
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
+
+
+def test_textfile_pipeline(tmp_path):
+    path = tmp_path / "corpus.txt"
+    path.write_bytes(bytes(range(256)) * 40)
+    cfg = DataConfig(global_batch=2, seq_len=16, vocab=256)
+    p = TextFileLM(cfg, str(path))
+    b = next(p)
+    assert b["tokens"].shape == (2, 16)
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
+
+
+# ------------------------------------------------------------- optimizer
+def test_adamw_reduces_quadratic_loss():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    init, update = adamw.make_optimizer(
+        schedules.constant(0.1), adamw.AdamWConfig(weight_decay=0.0,
+                                                   clip_norm=None))
+    state = init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(200):
+        grads = jax.grad(loss)(params)
+        params, state, _ = update(grads, state, params)
+    assert float(loss(params)) < 1e-2
+
+
+@given(st.floats(0.1, 10.0))
+@settings(max_examples=20, deadline=None)
+def test_clip_by_global_norm(max_norm):
+    g = {"a": jnp.full((4,), 10.0), "b": jnp.full((3,), -10.0)}
+    clipped, norm = adamw.clip_by_global_norm(g, max_norm)
+    got = adamw.global_norm(clipped)
+    assert float(got) <= max_norm * (1 + 1e-5)
+    if float(norm) <= max_norm:   # below threshold -> untouched
+        np.testing.assert_allclose(np.asarray(clipped["a"]), 10.0)
+
+
+def test_wsd_schedule_phases():
+    f = schedules.wsd_schedule(1.0, warmup_steps=10, stable_steps=100,
+                               decay_steps=50)
+    assert float(f(0)) == 0.0
+    assert float(f(5)) == pytest.approx(0.5)
+    assert float(f(50)) == pytest.approx(1.0)       # stable
+    assert float(f(109)) == pytest.approx(1.0)
+    assert float(f(160)) == pytest.approx(0.01, rel=1e-3)  # decayed
+    # monotone decay inside the decay window
+    assert float(f(120)) > float(f(140)) > float(f(159))
+
+
+# ----------------------------------------------------------- compression
+@given(st.integers(1, 2000), st.floats(0.01, 100.0))
+@settings(max_examples=25, deadline=None)
+def test_int8_roundtrip_error_bound(n, scale):
+    rng = np.random.default_rng(n)
+    g = jnp.asarray(rng.standard_normal(n) * scale, jnp.float32)
+    q, s = compression.compress_int8(g)
+    deq = compression.decompress_int8(q, s, g.shape, jnp.float32)
+    # block-wise max error is scale/127 per block
+    err = np.abs(np.asarray(deq - g))
+    block_max = np.asarray(jnp.abs(g)).max()
+    assert err.max() <= block_max / 127.0 + 1e-6
+
+
+def test_error_feedback_preserves_sum():
+    """Property: over k steps, sum(dequantized) + final_error == sum(grads)
+    — error feedback never loses gradient mass."""
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.zeros((64,))}
+    err = compression.init_error(params)
+    total_in, total_out = np.zeros(64), np.zeros(64)
+    for i in range(10):
+        g = {"w": jnp.asarray(rng.standard_normal(64) * 0.01, jnp.float32)}
+        total_in += np.asarray(g["w"])
+        deq, err = compression.compressed_allreduce_update(g, err)
+        total_out += np.asarray(deq["w"])
+    np.testing.assert_allclose(total_out + np.asarray(err["w"]), total_in,
+                               rtol=1e-4, atol=1e-6)
+
+
+# ------------------------------------------------------------ checkpoint
+def _tree():
+    return {"params": {"w": jnp.arange(12.0).reshape(3, 4),
+                       "b": jnp.ones((4,))},
+            "opt": {"step": jnp.asarray(7, jnp.int32)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path / "ckpt")
+    state = _tree()
+    save_checkpoint(d, 10, state, extra={"data": {"step": 5}})
+    out = restore_latest(d, jax.tree.map(jnp.zeros_like, state))
+    assert out is not None
+    step, restored, extra = out
+    assert step == 10 and extra == {"data": {"step": 5}}
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_keep_k_and_latest(tmp_path):
+    d = str(tmp_path / "ckpt")
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(d, s, _tree(), keep=2)
+    dirs = sorted(os.listdir(d))
+    assert dirs == ["step_00000004", "step_00000005"]
+
+
+def test_checkpoint_atomic_no_partial_visible(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, _tree())
+    # a crashed write leaves only a .tmp dir -> restore must ignore it
+    os.makedirs(os.path.join(d, "step_00000002.tmp"))
+    out = restore_latest(d, jax.tree.map(jnp.zeros_like, _tree()))
+    assert out[0] == 1
+
+
+def test_checkpoint_elastic_restore_resharding(tmp_path):
+    """Restore with explicit (degenerate 1-device) shardings — the elastic
+    path: arrays land with the *current* mesh's sharding."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    d = str(tmp_path / "ckpt")
+    state = _tree()
+    save_checkpoint(d, 3, state)
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), state)
+    step, restored, _ = restore_latest(d, jax.tree.map(jnp.zeros_like, state),
+                                       shardings=sh)
+    assert step == 3
+    assert restored["params"]["w"].sharding == NamedSharding(mesh, P())
+
+
+# -------------------------------------------------------- fault tolerance
+def test_straggler_detection():
+    t = StepTimer(min_steps=6, ratio=1.5, k_sigma=100.0)
+    import time as _t
+    for i in range(6):
+        t.start()
+        _t.sleep(0.01)
+        assert t.stop(i) is None       # warmup: below min_steps, never flags
+    t.start()
+    _t.sleep(0.08)
+    rep = t.stop(6)
+    assert rep is not None and rep.duration_s > rep.threshold_s
+
+
+def test_preemption_handler_flag():
+    h = PreemptionHandler(install=False)
+    assert not h.should_stop
+    h.request_stop()
+    assert h.should_stop

@@ -1,14 +1,15 @@
-"""Serving driver: batched prefill + decode loop with a request queue.
+"""Serving driver: continuous-batching engine loop (default) or the legacy
+static-batch server (``--static-batching``).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2_1_5b \
-        --scale smoke --batch 4 --prompt-len 32 --gen-len 32
+        --scale smoke --slots 8 --requests 32 --rate 16
 
-Implements the standard two-phase serving flow:
-  * requests accumulate into a batch (static batching; the queue refills
-    between generations);
-  * prefill computes the KV cache (padded to max_len so decode's rolling
-    writes never overflow);
-  * decode greedily emits one token per step for the whole batch.
+Continuous path (repro.serving): an open-loop arrival stream feeds a
+slot-based KV pool; the batcher prices admission with core/cost_model.py and
+the jitted engine step interleaves prefill with the running decode batch.
+Static path: requests accumulate into a batch; prefill replays the prompt
+into a max_len cache; decode emits one token per step for the whole batch —
+the queue refills only between generations (head-of-line blocking).
 
 On the production mesh, params/caches shard per models/sharding.py — the
 same shardings the dry-run validates for the decode_32k / long_500k cells.
@@ -27,26 +28,24 @@ import jax.numpy as jnp
 from ..configs import registry
 from ..models import sharding as shard_lib
 from ..models import transformer as T
+from ..serving import EngineLoop, synthetic_workload
 from .mesh import make_host_mesh, make_production_mesh
 
 
 class Server:
+    """Legacy static-batching server (the continuous engine's baseline)."""
+
     def __init__(self, cfg: T.ModelConfig, params, mesh, max_len: int):
         self.cfg = cfg
         self.params = params
         self.mesh = mesh
         self.max_len = max_len
         self._decode = jax.jit(
-            functools.partial(T.decode_step, cfg=self.cfg), donate_argnums=(1,),
-            static_argnames=()) if False else jax.jit(
             lambda p, c, t: T.decode_step(p, cfg, c, t), donate_argnums=(1,))
-        self._prefill = jax.jit(
-            lambda p, t: T.forward(p, cfg, t, emit_cache=True))
 
     def generate(self, prompts: jnp.ndarray, gen_len: int) -> jnp.ndarray:
         """prompts: (B, P) int32.  Returns (B, gen_len)."""
         b, plen = prompts.shape
-        logits, _ = self._prefill(self.params, prompts)
         # build a max_len cache and replay the prompt through decode steps
         # (keeps the cache layout identical to the dry-run serve_step cells)
         cache = T.init_cache(self.cfg, b, max_seq=self.max_len)
@@ -61,16 +60,40 @@ class Server:
         return jnp.concatenate(out, axis=1)
 
 
+def build_params(cfg: T.ModelConfig, mesh):
+    policy = shard_lib.make_policy(cfg, mesh)
+    p_shapes = jax.eval_shape(
+        functools.partial(T.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    p_sh = shard_lib.param_shardings(cfg, policy, p_shapes)
+    with mesh:
+        return jax.jit(functools.partial(T.init_params, cfg=cfg),
+                       out_shardings=p_sh)(jax.random.PRNGKey(0))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2_1_5b")
     ap.add_argument("--scale", default="smoke", choices=["smoke", "full"])
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="static path: batch size")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--mesh", default="host", choices=["host", "pod",
                                                        "multipod"])
+    ap.add_argument("--static-batching", action="store_true",
+                    help="legacy fallback: static batches instead of the "
+                         "continuous engine")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="continuous path: KV pool slots")
+    ap.add_argument("--rate", type=float, default=16.0,
+                    help="continuous path: offered load (req/s)")
+    ap.add_argument("--step-slo-ms", type=float, default=None,
+                    help="continuous path: per-step latency objective the "
+                         "cost model prices admission against")
+    ap.add_argument("--device-model", default="tpu-v5e",
+                    help="continuous path: core/device_models entry used to "
+                         "price admission")
     args = ap.parse_args()
 
     arch = registry.get(args.arch)
@@ -81,33 +104,50 @@ def main() -> None:
 
     mesh = (make_host_mesh() if args.mesh == "host" else
             make_production_mesh(multi_pod=args.mesh == "multipod"))
-    policy = shard_lib.make_policy(cfg, mesh)
-    p_shapes = jax.eval_shape(
-        functools.partial(T.init_params, cfg=cfg), jax.random.PRNGKey(0))
-    p_sh = shard_lib.param_shardings(cfg, policy, p_shapes)
+    params = build_params(cfg, mesh)
+    max_len = args.prompt_len + args.gen_len
+
+    if args.static_batching:
+        server = Server(cfg, params, mesh, max_len=max_len)
+        rng = jax.random.PRNGKey(1)
+        done = 0
+        t0 = time.time()
+        while done < args.requests:
+            n = min(args.batch, args.requests - done)
+            rng, k = jax.random.split(rng)
+            prompts = jax.random.randint(k, (n, args.prompt_len), 0,
+                                         cfg.vocab)
+            with mesh:
+                toks = server.generate(prompts, args.gen_len)
+            toks.block_until_ready()
+            done += n
+            print(f"[serve] batch of {n}: generated {toks.shape} "
+                  f"first row: {toks[0, :8].tolist()}", flush=True)
+        dt = time.time() - t0
+        total_toks = args.requests * args.gen_len
+        print(f"served {args.requests} requests, {total_toks} tokens in "
+              f"{dt:.1f}s ({total_toks / dt:.1f} tok/s)")
+        return
+
+    # continuous batching: mixed-length open-loop traffic
+    requests = synthetic_workload(
+        args.requests, rate=args.rate, vocab=cfg.vocab,
+        prompt_lens=(max(args.prompt_len // 2, 1), args.prompt_len),
+        gen_lens=(max(args.gen_len // 8, 1), max(args.gen_len // 2, 1),
+                  args.gen_len),
+        seed=1)
+    engine = EngineLoop(
+        cfg, params, n_slots=args.slots, max_seq=max_len,
+        device_name=args.device_model,
+        step_slo_s=None if args.step_slo_ms is None
+        else args.step_slo_ms / 1e3)
     with mesh:
-        params = jax.jit(functools.partial(T.init_params, cfg=cfg),
-                         out_shardings=p_sh)(jax.random.PRNGKey(0))
-
-    server = Server(cfg, params, mesh, max_len=args.prompt_len + args.gen_len)
-
-    rng = jax.random.PRNGKey(1)
-    done = 0
-    t0 = time.time()
-    while done < args.requests:
-        n = min(args.batch, args.requests - done)
-        rng, k = jax.random.split(rng)
-        prompts = jax.random.randint(k, (n, args.prompt_len), 0, cfg.vocab)
-        with mesh:
-            toks = server.generate(prompts, args.gen_len)
-        toks.block_until_ready()
-        done += n
-        print(f"[serve] batch of {n}: generated {toks.shape} "
-              f"first row: {toks[0, :8].tolist()}", flush=True)
-    dt = time.time() - t0
-    total_toks = args.requests * args.gen_len
-    print(f"served {args.requests} requests, {total_toks} tokens in "
-          f"{dt:.1f}s ({total_toks / dt:.1f} tok/s)")
+        metrics = engine.run(requests)
+    print(f"[serve] token budget {engine.batcher.token_budget}/{args.slots} "
+          f"slots (device model {args.device_model})")
+    for k, v in metrics.summary().items():
+        val = f"{v:.4f}" if isinstance(v, float) else str(v)
+        print(f"[serve] {k:>22}: {val}", flush=True)
 
 
 if __name__ == "__main__":

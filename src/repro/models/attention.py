@@ -216,7 +216,9 @@ def decode_attention(q, k_cache, v_cache, *, pos: jax.Array,
     """Single-token attention against a cache.
 
     q: (B, HQ, 1, D); caches: (B, HK, T, D).  `pos` is the absolute position
-    of the current token.  For windowed layers the cache is a rolling buffer
+    of the current token — a scalar shared by the batch, or a (B,) vector of
+    per-slot positions (continuous-batching: each cache row belongs to a
+    different request).  For windowed layers the cache is a rolling buffer
     of size T == window written at pos % T; validity = slot was written.
     """
     b, hq, _, d = q.shape
@@ -231,11 +233,12 @@ def decode_attention(q, k_cache, v_cache, *, pos: jax.Array,
                         k_cache,
                         preferred_element_type=jnp.float32) * scale
     slots = jnp.arange(t)
-    if window is None:
-        valid = slots <= pos
-    else:
-        valid = slots <= jnp.minimum(pos, t - 1)             # rolling buffer
-    logits = jnp.where(valid[None, None, None], logits, _NEG_INF)
+    pos_a = jnp.asarray(pos)
+    cap = pos_a if window is None else jnp.minimum(pos_a, t - 1)
+    valid = slots <= cap[..., None]          # (t,) scalar | (B, t) per-slot
+    mask = (valid[None, None, None] if valid.ndim == 1
+            else valid[:, None, None, :])
+    logits = jnp.where(mask, logits, _NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgt,bktd->bkgd", probs.astype(v_cache.dtype),
                      v_cache, preferred_element_type=jnp.float32)

@@ -487,21 +487,27 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict:
 
 
 def _decode_attn_block(p, x, cache, cfg: ModelConfig, pos, cross_feats):
+    """`pos` is a scalar (whole batch at one position — static batching) or a
+    (B,) vector of per-slot positions (continuous batching)."""
     h_in = rmsnorm(x, p["ln1"], cfg.norm_eps)
     q, k, v = _project_qkv(p["attn"], h_in, cfg)
-    posb = jnp.full((1, 1), pos)
-    q = apply_rope(q, posb[None], cfg.rope_theta)
-    k = apply_rope(k, posb[None], cfg.rope_theta)
+    pos_a = jnp.asarray(pos)
+    per_slot = pos_a.ndim == 1
+    posq = pos_a[:, None, None] if per_slot else jnp.full((1, 1, 1), pos_a)
+    q = apply_rope(q, posq, cfg.rope_theta)
+    k = apply_rope(k, posq, cfg.rope_theta)
     t = cache["k"].shape[2]
     if cfg.attn_window is not None:
-        slot = pos % t                      # rolling buffer
+        slot = pos_a % t                    # rolling buffer
     else:
-        slot = jnp.minimum(pos, t - 1)
+        slot = jnp.minimum(pos_a, t - 1)
     # one-hot (select-based) cache write: elementwise over the time dim, so
     # a time-SHARDED cache updates locally — dynamic_update_slice at a traced
     # index would force GSPMD to all-gather the cache (measured: +10 GB temp
     # per decode step on kv-unshardable archs)
-    onehot = (jnp.arange(t) == slot)[None, None, :, None]
+    onehot = (jnp.arange(t) == slot[..., None])  # (t,) | (B, t)
+    onehot = (onehot[:, None, :, None] if per_slot
+              else onehot[None, None, :, None])
     k_cache = jnp.where(onehot, k.astype(cache["k"].dtype), cache["k"])
     v_cache = jnp.where(onehot, v.astype(cache["v"].dtype), cache["v"])
     out = attn_lib.decode_attention(q, k_cache, v_cache, pos=pos,
@@ -538,11 +544,28 @@ def _decode_block(btype, p, x, cache, cfg: ModelConfig, pos, cross_feats):
     raise ValueError(btype)
 
 
-def decode_step(params, cfg: ModelConfig, cache: Dict, tokens: jax.Array):
-    """One decode step.  tokens: (B, 1) -> (logits (B, 1, V), new cache)."""
+def _decode_step_impl(params, cfg: ModelConfig, cache: Dict,
+                      tokens: jax.Array, active: Optional[jax.Array]):
+    """Shared decode-step body.  With ``active=None`` this is the static
+    path (scalar `pos`, whole batch advances); with an (B,) ``active`` mask
+    it is the continuous-batching path (per-slot (B,) `pos`, inactive slots
+    keep cache and position bit-for-bit)."""
     unit = cfg.pattern_unit()
     pos = cache["pos"]
     cross_feats = cache.get("cross")
+    b = tokens.shape[0]
+
+    if active is None:
+        keep = lambda new, old: new
+    else:
+        def keep(new, old):
+            def sel(n, o):
+                if getattr(n, "ndim", 0) == 0 or n.shape[0] != b:
+                    return n                # scannable placeholders (xattn)
+                return jnp.where(
+                    active.reshape((b,) + (1,) * (n.ndim - 1)), n, o)
+            return jax.tree.map(sel, new, old)
+
     x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
     x = _constrain_act(x, cfg)
 
@@ -555,7 +578,7 @@ def decode_step(params, cfg: ModelConfig, cache: Dict, tokens: jax.Array):
             h, nc = _decode_block(btype, ps[j], h, cs[j], cfg, pos,
                                   cross_feats)
             h = _constrain_act(h, cfg)
-            new_cs.append(nc)
+            new_cs.append(keep(nc, cs[j]))
         return h, tuple(new_cs)
 
     new_blocks = blocks_cache
@@ -566,16 +589,70 @@ def decode_step(params, cfg: ModelConfig, cache: Dict, tokens: jax.Array):
     for i, p in enumerate(params["decoder"]["rem"]):
         btype = unit[i % len(unit)]
         x, nc = _decode_block(btype, p, x, rem_cache[i], cfg, pos, cross_feats)
-        new_rem.append(nc)
+        new_rem.append(keep(nc, rem_cache[i]))
 
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     head = params.get("lm_head")
     if head is None:
         head = params["embed"].T
     logits = jnp.dot(x, head.astype(cfg.compute_dtype))
-    new_cache = {"layers": (new_blocks, tuple(new_rem)), "pos": pos + 1,
+    new_pos = pos + 1 if active is None else jnp.where(active, pos + 1, pos)
+    new_cache = {"layers": (new_blocks, tuple(new_rem)), "pos": new_pos,
                  "cross": cross_feats}
     return logits, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, cache: Dict, tokens: jax.Array):
+    """One decode step.  tokens: (B, 1) -> (logits (B, 1, V), new cache)."""
+    return _decode_step_impl(params, cfg, cache, tokens, active=None)
+
+
+# --------------------- slot-indexed decode (serving) -----------------------
+def init_slot_cache(cfg: ModelConfig, n_slots: int, max_seq: int) -> Dict:
+    """Cache for the continuous-batching engine: each batch row is a *slot*
+    owned by (at most) one in-flight request, with its own position counter.
+    Identical layout to `init_cache` except ``pos`` is per-slot (B,)."""
+    cache = init_cache(cfg, n_slots, max_seq)
+    cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
+    return cache
+
+
+def reset_slot_state(cfg: ModelConfig, cache: Dict, slot: int) -> Dict:
+    """Clear one slot's per-request state before binding a new request.
+
+    Attention KV rows need no clearing (per-slot position masks hide stale
+    entries), but recurrent SSM states (rec/mamba) carry no position and
+    WOULD leak across tenants — those are zeroed, matching `init_cache`."""
+    def zero_slot(c, axis):
+        if not (isinstance(c, dict) and ("rec" in c or "mamba" in c)):
+            return c
+        def z(leaf):
+            idx = (slice(None),) * axis + (slot,)
+            return leaf.at[idx].set(jnp.zeros_like(leaf[idx]))
+        return jax.tree.map(z, c)
+
+    blocks, rem = cache["layers"]
+    blocks = tuple(zero_slot(c, 1) for c in blocks)     # (n_super, B, ...)
+    rem = tuple(zero_slot(c, 0) for c in rem)           # (B, ...)
+    return {"layers": (blocks, rem),
+            "pos": cache["pos"].at[slot].set(0),
+            "cross": cache.get("cross")}
+
+
+def decode_step_slots(params, cfg: ModelConfig, cache: Dict,
+                      tokens: jax.Array, active: jax.Array):
+    """One engine step over independent slots.
+
+    tokens: (B, 1) int32 — per-slot next token (prompt token while the slot
+    is prefilling, previously sampled token while decoding; ignored for
+    inactive slots).  active: (B,) bool.  cache["pos"]: (B,) int32 per-slot
+    positions.  Inactive slots keep their cache and position bit-for-bit.
+
+    The per-slot math is exactly `decode_step`'s (same rope/write/mask ops,
+    vectorized over `pos`), which is what makes continuous-batching outputs
+    token-identical to the static replay path.
+    """
+    return _decode_step_impl(params, cfg, cache, tokens, active=active)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,15 @@
+"""Continuous-batching serving runtime (the CNNLab middleware idea applied
+to traffic): request lifecycle + arrivals, slot-based paged KV pool,
+cost-model-priced admission, and the jitted engine loop with serving
+metrics (TTFT / TPOT / tok-s / p50 / p99)."""
+from .batcher import (ContinuousBatcher, decode_network_spec,
+                      step_time_model, token_budget_for_slo)
+from .engine_loop import EngineLoop, ServeMetrics
+from .kv_pool import KVPool
+from .request import Request, RequestState, synthetic_workload
+
+__all__ = [
+    "ContinuousBatcher", "EngineLoop", "KVPool", "Request", "RequestState",
+    "ServeMetrics", "decode_network_spec", "step_time_model",
+    "synthetic_workload", "token_budget_for_slo",
+]

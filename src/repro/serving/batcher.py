@@ -1,0 +1,145 @@
+"""Token-budgeted continuous batcher with engine-aware admission.
+
+Every engine iteration processes one token per active slot, so the step's
+token count == the number of active slots.  The batcher decides how many
+slots may be active by pricing a decode step with ``core/cost_model.py`` on
+the target device model — the same trade-off machinery the layer scheduler
+uses to pick engines (CNNLab §III.A), applied to traffic instead of layers:
+admission stops at the largest batch whose modeled step time still meets the
+per-step latency objective (decode SLO), and at the KV pool's free blocks.
+
+Eviction is deadline shedding: queued requests whose deadline has passed are
+DROPPED rather than admitted (they would miss their SLO anyway and only
+steal pool blocks from live traffic).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from ..core import device_models
+from ..core.cost_model import layer_cost
+from ..core.layer_model import (AttentionSpec, MLPSpec, MoESpec, NetworkSpec,
+                                SSMSpec)
+from ..models.transformer import ModelConfig
+from .kv_pool import KVPool
+from .request import Request, RequestState
+
+
+def decode_network_spec(cfg: ModelConfig, kv_len: int) -> NetworkSpec:
+    """Declarative per-token decode-step spec for `cfg` (CNNLab layer
+    tuples) — what the cost model prices admission against."""
+    layers = []
+    for i, btype in enumerate(cfg.layer_types()):
+        if btype in ("attn", "xattn"):
+            layers.append(AttentionSpec(
+                f"L{i}.attn", d_model=cfg.d_model, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, seq=1, kv_len=kv_len,
+                causal=True, window=cfg.attn_window, qkv_bias=cfg.qkv_bias,
+                cross=btype == "xattn"))
+        elif btype == "rec":
+            layers.append(SSMSpec(f"L{i}.rglru", d_model=cfg.d_model,
+                                  d_state=cfg.ssm_state, d_conv=cfg.ssm_conv,
+                                  expand=cfg.ssm_expand, seq=1,
+                                  variant="rglru"))
+        elif btype == "mamba":
+            layers.append(SSMSpec(f"L{i}.mamba", d_model=cfg.d_model,
+                                  d_state=cfg.ssm_state, d_conv=cfg.ssm_conv,
+                                  expand=cfg.ssm_expand, seq=1,
+                                  variant="mamba1"))
+        if btype != "mamba":            # mamba blocks have no separate MLP
+            if cfg.n_experts > 0:
+                layers.append(MoESpec(f"L{i}.moe", d_model=cfg.d_model,
+                                      d_ff=cfg.d_ff, seq=1,
+                                      n_experts=cfg.n_experts,
+                                      top_k=cfg.moe_top_k,
+                                      gated=cfg.gated_mlp))
+            else:
+                layers.append(MLPSpec(f"L{i}.mlp", d_model=cfg.d_model,
+                                      d_ff=cfg.d_ff, seq=1,
+                                      gated=cfg.gated_mlp))
+    return NetworkSpec(f"{cfg.name}-decode-step", tuple(layers))
+
+
+def step_time_model(cfg: ModelConfig, kv_len: int, n_tokens: int,
+                    device_name: str = "tpu-v5e",
+                    dtype_bytes: int = 2) -> float:
+    """Modeled wall time of one engine step carrying `n_tokens` tokens."""
+    device = device_models.get(device_name)
+    net = decode_network_spec(cfg, kv_len)
+    return sum(layer_cost(l, device, batch=n_tokens,
+                          dtype_bytes=dtype_bytes).t_total for l in net)
+
+
+def token_budget_for_slo(cfg: ModelConfig, kv_len: int, n_slots: int,
+                         step_slo_s: float,
+                         device_name: str = "tpu-v5e") -> int:
+    """Largest per-step token count whose modeled step time meets the SLO
+    (always >= 1: a budget that admits nothing serves nothing)."""
+    budget = 1
+    for k in range(2, n_slots + 1):
+        if step_time_model(cfg, kv_len, k, device_name) > step_slo_s:
+            break
+        budget = k
+    return budget
+
+
+@dataclasses.dataclass
+class AdmissionDecision:
+    admitted: List[Request]
+    dropped: List[Request]
+
+
+class ContinuousBatcher:
+    """Admits QUEUED requests into pool slots against the token budget."""
+
+    def __init__(self, cfg: ModelConfig, pool: KVPool, *,
+                 device_name: str = "tpu-v5e",
+                 step_slo_s: Optional[float] = None,
+                 token_budget: Optional[int] = None):
+        self.cfg = cfg
+        self.pool = pool
+        self.device_name = device_name
+        if token_budget is None:
+            if step_slo_s is None:
+                token_budget = pool.n_slots
+            else:
+                token_budget = token_budget_for_slo(
+                    cfg, pool.max_seq, pool.n_slots, step_slo_s, device_name)
+        if token_budget <= 0:
+            raise ValueError("token_budget must be >= 1 (a budget that "
+                             "admits nothing serves nothing)")
+        self.token_budget = min(token_budget, pool.n_slots)
+
+    def admit(self, queue: List[Request], n_active: int,
+              now: float) -> AdmissionDecision:
+        """Pop admissible requests from `queue` (mutated in place).
+
+        Priority order: (priority, arrival).  A request that does not fit
+        the pool right now blocks lower-priority requests behind it only if
+        they would also not fit (no starvation of big requests, but small
+        ones may backfill free blocks).
+        """
+        admitted: List[Request] = []
+        dropped: List[Request] = []
+        queue.sort(key=lambda r: (r.priority, r.arrival, r.rid))
+        i = 0
+        while i < len(queue):
+            req = queue[i]
+            never_fits = (req.total_tokens > self.pool.max_seq
+                          or self.pool.blocks_needed(req.total_tokens)
+                          > self.pool.total_blocks)
+            if never_fits or (req.deadline is not None and now > req.deadline):
+                req.state = RequestState.DROPPED
+                dropped.append(queue.pop(i))
+                continue
+            if n_active + len(admitted) >= self.token_budget:
+                break
+            if not self.pool.can_admit(req.total_tokens):
+                i += 1                   # try to backfill a smaller request
+                continue
+            req.slot = self.pool.alloc(req.rid, req.total_tokens)
+            req.state = RequestState.PREFILL
+            req.t_admitted = now
+            admitted.append(queue.pop(i))
+        return AdmissionDecision(admitted=admitted, dropped=dropped)

@@ -1,0 +1,287 @@
+"""Continuous-batching engine loop + serving metrics.
+
+One jitted step (`decode_step_slots`) advances every active slot by one
+token per iteration — prefilling slots consume their next prompt token,
+decoding slots consume their previously sampled token — so prefill work
+interleaves with the running decode batch instead of stalling it, and a
+finished request's slot is refilled at the next completion boundary (no
+inter-batch idle, no head-of-line blocking on the longest generation).
+
+Token feeding is device-resident: the fused step selects each slot's next
+token from an uploaded prompt buffer (while ``pos < prompt_len``) or from
+the previous argmax, and scatters sampled tokens into a per-slot output
+buffer.  The host never syncs per step — request completion is
+deterministic in step count (greedy decoding, known lengths), so the loop
+dispatches a *burst* of steps up to the next completion boundary and only
+then pulls the finished slots' output rows.  This keeps per-step overhead
+at dispatch cost, matching the static server's async decode chain.
+
+The loop is driven by a clock function so tests can run it reproducibly;
+the CLI and benchmark use wall time, which is what the open-loop arrival
+process (request.synthetic_workload) is offered against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer as T
+from .batcher import ContinuousBatcher
+from .kv_pool import KVPool
+from .request import Request, RequestState
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    n_done: int = 0
+    n_dropped: int = 0
+    n_steps: int = 0
+    tokens_out: int = 0
+    tokens_in: int = 0
+    elapsed_s: float = 0.0
+    ttft_s: List[float] = dataclasses.field(default_factory=list)
+    tpot_s: List[float] = dataclasses.field(default_factory=list)
+    latency_s: List[float] = dataclasses.field(default_factory=list)
+    occupancy: List[float] = dataclasses.field(default_factory=list)
+    utilization: List[float] = dataclasses.field(default_factory=list)
+
+    def observe(self, req: Request) -> None:
+        self.n_done += 1
+        self.tokens_out += len(req.output)
+        self.tokens_in += req.prompt_len
+        if req.ttft is not None:
+            self.ttft_s.append(req.ttft)
+        if req.tpot is not None:
+            self.tpot_s.append(req.tpot)
+        if req.t_done is not None:
+            self.latency_s.append(req.t_done - req.arrival)
+
+    def summary(self) -> Dict[str, float]:
+        dt = max(self.elapsed_s, 1e-9)
+        return {
+            "requests_done": self.n_done,
+            "requests_dropped": self.n_dropped,
+            "steps": self.n_steps,
+            "tokens_in": self.tokens_in,
+            "tokens_out": self.tokens_out,
+            "elapsed_s": self.elapsed_s,
+            "tok_per_s": self.tokens_out / dt,
+            "req_per_s": self.n_done / dt,
+            "ttft_p50_s": _percentile(self.ttft_s, 50),
+            "ttft_p99_s": _percentile(self.ttft_s, 99),
+            "tpot_p50_s": _percentile(self.tpot_s, 50),
+            "tpot_p99_s": _percentile(self.tpot_s, 99),
+            "latency_p50_s": _percentile(self.latency_s, 50),
+            "latency_p99_s": _percentile(self.latency_s, 99),
+            "kv_occupancy_mean": (float(np.mean(self.occupancy))
+                                  if self.occupancy else 0.0),
+            "kv_utilization_mean": (float(np.mean(self.utilization))
+                                    if self.utilization else 0.0),
+        }
+
+
+def _fused_step(params, cfg, cache, prompts, plens, last_tok, out_buf,
+                active):
+    """Device-side feed + step + sample + output scatter.
+
+    prompts: (B, P_max) int32; plens/last_tok: (B,) int32; out_buf:
+    (B, G_max) int32; active: (B,) bool.  cache["pos"] counts tokens fed
+    per slot, so pos < plen selects the prompt, else the last sample."""
+    b = prompts.shape[0]
+    pos = cache["pos"]
+    prompt_tok = prompts[jnp.arange(b), jnp.minimum(pos, prompts.shape[1] - 1)]
+    tok = jnp.where(pos < plens, prompt_tok, last_tok)
+    logits, cache = T.decode_step_slots(params, cfg, cache, tok[:, None],
+                                        active)
+    nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    # the sample is output index (pos - plen + 1); valid once the final
+    # prompt token has been fed (same schedule as the static replay path)
+    idx = pos - plens + 1
+    write = active & (idx >= 0) & (idx < out_buf.shape[1])
+    safe_idx = jnp.clip(idx, 0, out_buf.shape[1] - 1)
+    row = out_buf[jnp.arange(b), safe_idx]
+    out_buf = out_buf.at[jnp.arange(b), safe_idx].set(
+        jnp.where(write, nxt, row))
+    last_tok = jnp.where(active, nxt, last_tok)
+    return cache, last_tok, out_buf
+
+
+class EngineLoop:
+    """Owns the slot cache, the jitted fused step, the pool, the batcher."""
+
+    # with arrivals pending, bursts stay short so admission latency is
+    # bounded; otherwise a burst runs to the next completion boundary
+    BURST_CAP_PENDING = 4
+
+    def __init__(self, cfg: T.ModelConfig, params, *, n_slots: int,
+                 max_seq: int, block_size: int = 16,
+                 total_blocks: Optional[int] = None,
+                 device_name: str = "tpu-v5e",
+                 step_slo_s: Optional[float] = None,
+                 token_budget: Optional[int] = None):
+        self.cfg = cfg
+        self.params = params
+        self.pool = KVPool(n_slots, max_seq, block_size=block_size,
+                           total_blocks=total_blocks)
+        self.batcher = ContinuousBatcher(
+            cfg, self.pool, device_name=device_name, step_slo_s=step_slo_s,
+            token_budget=token_budget)
+        self.cache = T.init_slot_cache(cfg, n_slots, max_seq)
+        self.max_prompt = max_seq
+        self.max_gen = max_seq
+        self._prompts = jnp.zeros((n_slots, self.max_prompt), jnp.int32)
+        self._plens = jnp.zeros((n_slots,), jnp.int32)
+        self._last_tok = jnp.zeros((n_slots,), jnp.int32)
+        self._out_buf = jnp.zeros((n_slots, self.max_gen), jnp.int32)
+        self._burst_fns: Dict[int, Callable] = {}
+        self._slots: List[Optional[Request]] = [None] * n_slots
+        # host-side schedule state: active steps done / total per slot
+        self._steps_done = np.zeros((n_slots,), np.int64)
+        self._steps_total = np.zeros((n_slots,), np.int64)
+
+    # largest scanned burst compiled; bounds compile count (power-of-two
+    # buckets 1..MAX_BUCKET)
+    MAX_BUCKET = 32
+
+    def _burst_fn(self, k: int) -> Callable:
+        """Jitted scan of k fused steps — one dispatch per bucket instead of
+        per token, so burst cost is dominated by device compute."""
+        fn = self._burst_fns.get(k)
+        if fn is None:
+            cfg = self.cfg
+
+            def burst(p, c, pr, pl, lt, ob, a):
+                def body(carry, _):
+                    c, lt, ob = carry
+                    return _fused_step(p, cfg, c, pr, pl, lt, ob, a), None
+                (c, lt, ob), _ = jax.lax.scan(body, (c, lt, ob), None,
+                                              length=k)
+                return c, lt, ob
+
+            fn = jax.jit(burst, donate_argnums=(1, 4, 5))
+            self._burst_fns[k] = fn
+        return fn
+
+    def warmup(self) -> None:
+        """Compile every burst bucket.  An all-inactive step leaves cache,
+        positions and buffers bit-identical, so this is state-neutral."""
+        idle = jnp.zeros((self.pool.n_slots,), bool)
+        b = 1
+        while b <= self.MAX_BUCKET:
+            (self.cache, self._last_tok, self._out_buf) = self._burst_fn(b)(
+                self.params, self.cache, self._prompts, self._plens,
+                self._last_tok, self._out_buf, idle)
+            b *= 2
+
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self._slots)
+
+    def _bind_slot(self, req: Request) -> None:
+        """Upload the request's prompt into its slot and reset per-request
+        state (position counter + recurrent SSM states; attention KV rows
+        need no clearing — per-slot position masks hide stale entries)."""
+        s = req.slot
+        row = np.zeros((self.max_prompt,), np.int32)
+        row[:req.prompt_len] = req.prompt
+        self._prompts = self._prompts.at[s].set(jnp.asarray(row))
+        self._plens = self._plens.at[s].set(req.prompt_len)
+        self.cache = T.reset_slot_state(self.cfg, self.cache, s)
+        self._slots[s] = req
+        self._steps_done[s] = 0
+        # greedy decoding with known lengths: completion is deterministic —
+        # the final sample lands after plen + gen - 1 active steps
+        self._steps_total[s] = req.prompt_len + req.max_new_tokens - 1
+
+    def run(self, requests: List[Request], *,
+            now_fn: Callable[[], float] = time.perf_counter,
+            max_steps: Optional[int] = None) -> ServeMetrics:
+        """Serve `requests` (an arrival-stamped open-loop stream) to
+        completion.  Returns the aggregate metrics."""
+        metrics = ServeMetrics()
+        pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        queue: List[Request] = []
+        active_np = np.zeros((self.pool.n_slots,), bool)
+        t0 = now_fn()
+        skew = 0.0                       # idle fast-forward (see below)
+        clock = lambda: now_fn() - t0 + skew
+
+        while pending or queue or self.n_active:
+            now = clock()
+            # open-loop arrivals: everything whose arrival time has passed
+            # joins the queue
+            while pending and pending[0].arrival <= now:
+                queue.append(pending.pop(0))
+            if not queue and not self.n_active:
+                # fully idle with the next arrival in the future: fast-
+                # forward the clock to it instead of busy-waiting, so
+                # timestamps stay on the offered-load timeline (TTFT and
+                # latency remain >= 0)
+                skew += pending[0].arrival - now
+                continue
+            decision = self.batcher.admit(queue, self.n_active, now)
+            metrics.n_dropped += len(decision.dropped)
+            for req in decision.admitted:
+                self._bind_slot(req)
+                active_np[req.slot] = True
+
+            if self.n_active == 0:
+                continue                 # nothing admissible (pool pressure)
+
+            # burst: dispatch steps to the next completion boundary without
+            # any host sync; the device chain pipelines behind dispatch
+            remaining = self._steps_total - self._steps_done
+            burst = int(remaining[active_np].min())
+            if pending:
+                burst = min(burst, self.BURST_CAP_PENDING)
+            if max_steps is not None:
+                burst = min(burst, max_steps - metrics.n_steps)
+            active_dev = jnp.asarray(active_np)
+            k = burst
+            while k > 0:
+                b = min(self.MAX_BUCKET, 1 << (k.bit_length() - 1))
+                (self.cache, self._last_tok, self._out_buf) = self._burst_fn(
+                    b)(self.params, self.cache, self._prompts, self._plens,
+                       self._last_tok, self._out_buf, active_dev)
+                k -= b
+            self._steps_done[active_np] += burst
+            metrics.n_steps += burst
+            for req in (r for r in self._slots if r is not None):
+                self.pool.note_write(req.rid, burst)
+            metrics.occupancy.append(self.pool.occupancy())
+            metrics.utilization.append(self.pool.utilization())
+
+            now = clock()
+            for s, req in enumerate(self._slots):
+                if req is None:
+                    continue
+                req.n_fed = int(self._steps_done[s])
+                if (req.state is RequestState.PREFILL
+                        and req.n_fed >= req.prompt_len):
+                    # first sample landed inside this burst (dispatch-time
+                    # stamp; completion below syncs the chain)
+                    req.state = RequestState.DECODE
+                    req.t_first_token = now
+                if self._steps_done[s] >= self._steps_total[s]:
+                    # completion boundary: sync and pull this slot's tokens
+                    row = np.asarray(self._out_buf[s])
+                    req.output = row[:req.max_new_tokens].tolist()
+                    req.state = RequestState.DONE
+                    req.t_done = clock()
+                    self.pool.free(req.rid)
+                    self._slots[s] = None
+                    active_np[s] = False
+                    metrics.observe(req)
+            if max_steps is not None and metrics.n_steps >= max_steps:
+                break
+        metrics.elapsed_s = clock()
+        return metrics

@@ -1,0 +1,95 @@
+"""Request lifecycle + synthetic open-loop arrival process.
+
+A request moves QUEUED -> PREFILL -> DECODE -> DONE (or DROPPED if its
+deadline passes while still queued).  Prefill here is *decode-replay*: the
+engine feeds prompt tokens through the same slot-decode step the static
+server uses, one token per engine iteration, so per-request greedy outputs
+are bit-identical between the two paths (tests/test_serving.py asserts it).
+
+The arrival process is the standard open-loop serving model: exponential
+interarrival times at an offered load of ``rate`` requests/second, with
+prompt/generation lengths drawn from small discrete mixes — the mixed-length
+traffic that makes static batching pay head-of-line blocking.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+    DROPPED = "dropped"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (P,) int32 token ids
+    max_new_tokens: int
+    arrival: float = 0.0                # seconds since stream start
+    priority: int = 0                   # lower = more urgent
+    deadline: Optional[float] = None    # absolute; queued past it -> DROPPED
+
+    state: RequestState = RequestState.QUEUED
+    slot: Optional[int] = None
+    n_fed: int = 0                      # prompt tokens consumed so far
+    output: List[int] = dataclasses.field(default_factory=list)
+    t_admitted: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def total_tokens(self) -> int:
+        """Full KV footprint the request will ever need (reservation unit)."""
+        return self.prompt_len + self.max_new_tokens
+
+    # ---- metrics ---------------------------------------------------------
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.arrival
+
+    @property
+    def tpot(self) -> Optional[float]:
+        """Time per output token after the first (decode-phase latency)."""
+        if self.t_done is None or self.t_first_token is None:
+            return None
+        n = max(len(self.output) - 1, 1)
+        return (self.t_done - self.t_first_token) / n
+
+
+def synthetic_workload(
+    n_requests: int,
+    *,
+    rate: float,
+    vocab: int,
+    prompt_lens: Sequence[int] = (8, 16),
+    gen_lens: Sequence[int] = (4, 8, 16, 48),
+    seed: int = 0,
+    deadline_s: Optional[float] = None,
+) -> List[Request]:
+    """Open-loop Poisson arrivals with mixed prompt/generation lengths."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    reqs = []
+    for rid in range(n_requests):
+        t += float(rng.exponential(1.0 / rate)) if rate > 0 else 0.0
+        plen = int(rng.choice(prompt_lens))
+        glen = int(rng.choice(gen_lens))
+        prompt = rng.integers(0, vocab, size=(plen,), dtype=np.int32)
+        reqs.append(Request(
+            rid=rid, prompt=prompt, max_new_tokens=glen, arrival=t,
+            deadline=None if deadline_s is None else t + deadline_s))
+    return reqs

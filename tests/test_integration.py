@@ -123,11 +123,19 @@ def test_train_cli_runs_and_resumes(tmp_path):
 
 def test_serve_cli_generates(tmp_path):
     env = dict(os.environ, PYTHONPATH="src")
-    cmd = [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen2_1_5b",
-           "--scale", "smoke", "--batch", "2", "--prompt-len", "8",
-           "--gen-len", "8", "--requests", "4"]
-    r = subprocess.run(cmd, capture_output=True, text=True, cwd="/root/repo",
+    base = [sys.executable, "-m", "repro.launch.serve", "--arch",
+            "qwen2_1_5b", "--scale", "smoke", "--batch", "2", "--prompt-len",
+            "8", "--gen-len", "8", "--requests", "4"]
+    # default path: continuous-batching engine (repro.serving)
+    r = subprocess.run(base + ["--slots", "2", "--rate", "100"],
+                       capture_output=True, text=True, cwd="/root/repo",
                        env=env, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "requests_done: 4" in r.stdout
+    assert "requests_dropped: 0" in r.stdout
+    # legacy fallback: static batching
+    r = subprocess.run(base + ["--static-batching"], capture_output=True,
+                       text=True, cwd="/root/repo", env=env, timeout=600)
     assert r.returncode == 0, r.stderr[-2000:]
     assert "served 4 requests" in r.stdout
 

@@ -98,8 +98,9 @@ def layer_cost(
         bytes_moved *= 2  # re-read activations + write grads (rough model)
 
     kind = spec.kind
-    if device.analytic:
-        eff_peak = device.peak_flops * mxu_efficiency
+    if device.analytic_for(kind):
+        eff_peak = (device.peak_flops * mxu_efficiency
+                    * device.roofline_efficiency(kind))
         t_c = flops / (n_chips * eff_peak)
         t_m = bytes_moved / (n_chips * device.mem_bw)
         t_x = (

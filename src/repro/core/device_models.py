@@ -57,6 +57,17 @@ class DeviceModel:
             return self.throughput[kind]
         return self.peak_flops
 
+    def analytic_for(self, kind: str) -> bool:
+        """Whether `kind` is priced with the first-principles roofline
+        (subclasses with partial empirical coverage override per kind)."""
+        return self.analytic
+
+    def roofline_efficiency(self, kind: str) -> float:
+        """Model-intrinsic achieved-fraction multiplier for the roofline
+        compute term (1.0 here; calibrated models carry the engine's
+        nominal efficiency for their unmeasured kinds)."""
+        return 1.0
+
     def watts(self, kind: str, direction: str = "fwd") -> float:
         if direction == "bwd" and kind in self.power_bwd:
             return self.power_bwd[kind]
@@ -152,6 +163,16 @@ REGISTRY = {m.name: m for m in (TPU_V5E, K40, K40_CUBLAS, K40_CUDNN, DE5)}
 
 def get(name: str) -> DeviceModel:
     return REGISTRY[name]
+
+
+def register(model: DeviceModel, *, overwrite: bool = False) -> DeviceModel:
+    """Add a model (e.g. a profiling-calibrated one) to the registry so
+    name-keyed consumers — the serving batcher's ``device_name`` — can
+    price on it."""
+    if model.name in REGISTRY and not overwrite:
+        raise ValueError(f"device model {model.name!r} already registered")
+    REGISTRY[model.name] = model
+    return model
 
 
 def fpga_module_peak(kind: str) -> float:

@@ -16,6 +16,12 @@ A plan also carries per-layer *offload overhead* (the paper's PCIe sync,
 Fig. 5 step 4): switching engines between adjacent layers costs the
 activation transfer at link bandwidth.  This is what makes "all FC on GPU,
 all conv wherever" style plans emerge exactly as the paper observed.
+
+Pricing sources: ``price="analytic"`` (default) uses the static device
+models; ``price="measured"`` is the paper's profile-then-offload runtime
+flow — candidates are priced from the empirical profile cache
+(``repro.profiling``), measuring on miss, and fall back to analytic for
+anything unmeasurable (cost-only paper devices, backward passes).
 """
 from __future__ import annotations
 
@@ -40,6 +46,10 @@ class ExecutionPlan:
     network: str
     objective: str
     assignments: Tuple[Assignment, ...]
+    pricing: str = "analytic"            # "analytic" | "measured"
+    # the operating point the plan was priced at (re-pricing preserves it)
+    batch: int = 1
+    dtype_bytes: int = 4
 
     @property
     def total_time(self) -> float:
@@ -85,18 +95,37 @@ def _candidate_costs(
     dtype_bytes: int,
     n_chips: int,
     direction: str,
+    pricer=None,
 ) -> Dict[str, CostBreakdown]:
     out = {}
     for eng in engines:
         if not eng.supports(spec):
             continue
-        eff = eng.efficiency if eng.device.analytic else 1.0
-        out[eng.name] = layer_cost(
-            spec, eng.device, batch=batch, dtype_bytes=dtype_bytes,
-            n_chips=n_chips, direction=direction, mxu_efficiency=eff)
+        cost = None
+        if pricer is not None:
+            cost = pricer.price(spec, eng, batch=batch,
+                                dtype_bytes=dtype_bytes, n_chips=n_chips,
+                                direction=direction)
+        if cost is None:                 # analytic model (or pricer declined)
+            eff = eng.efficiency if eng.device.analytic else 1.0
+            cost = layer_cost(
+                spec, eng.device, batch=batch, dtype_bytes=dtype_bytes,
+                n_chips=n_chips, direction=direction, mxu_efficiency=eff)
+        out[eng.name] = cost
     if not out:
         raise ValueError(f"no engine supports layer {spec.name} ({spec.kind})")
     return out
+
+
+def _resolve_pricer(price: str, pricer):
+    if price not in ("analytic", "measured"):
+        raise ValueError(f"unknown pricing source: {price!r}")
+    if price == "analytic":
+        return None
+    if pricer is None:
+        from ..profiling.pricer import MeasuredPricer  # avoid import cycle
+        pricer = MeasuredPricer()
+    return pricer
 
 
 def schedule(
@@ -109,15 +138,24 @@ def schedule(
     n_chips: int = 1,
     direction: str = "fwd",
     power_cap_w: Optional[float] = None,
+    price: str = "analytic",
+    pricer=None,
 ) -> ExecutionPlan:
     """Per-layer DSE.  `power_cap_w` adds the paper's motivating constraint
     ("data centers quite power consuming"): only engines whose running power
-    fits the cap are eligible; if none fit, the lowest-power engine wins."""
+    fits the cap are eligible; if none fit, the lowest-power engine wins.
+
+    ``price="measured"`` prices buildable candidates from the profiling
+    runtime (cache-on-hit, measure-on-miss); pass a configured
+    ``repro.profiling.MeasuredPricer`` as ``pricer`` to control the cache
+    location / measurement budget, else a default one is built.
+    """
+    pricer = _resolve_pricer(price, pricer)
     assignments = []
     for spec in net:
         cands = _candidate_costs(spec, engines, batch=batch,
                                  dtype_bytes=dtype_bytes, n_chips=n_chips,
-                                 direction=direction)
+                                 direction=direction, pricer=pricer)
         pool = cands
         if power_cap_w is not None:
             capped = {n: c for n, c in cands.items() if c.power_w <= power_cap_w}
@@ -125,7 +163,8 @@ def schedule(
                               cands[min(cands, key=lambda n: cands[n].power_w)]}
         best = min(pool, key=lambda n: objective_value(pool[n], objective))
         assignments.append(Assignment(spec, best, pool[best]))
-    return ExecutionPlan(net.name, objective, tuple(assignments))
+    return ExecutionPlan(net.name, objective, tuple(assignments),
+                         pricing=price, batch=batch, dtype_bytes=dtype_bytes)
 
 
 def schedule_exhaustive(

@@ -1,0 +1,19 @@
+"""jaxlib API compatibility shims for the Pallas TPU kernels.
+
+jax renamed the TPU compiler-params container across releases:
+``pltpu.TPUCompilerParams`` (<= 0.4.x era, e.g. the 0.4.37 this container
+ships) became ``pltpu.CompilerParams`` (newer jaxlib).  The kernels go
+through :func:`tpu_compiler_params` so they run on either spelling instead
+of raising ``AttributeError`` at call time; if a future jaxlib drops both,
+they degrade to compiler defaults (``compiler_params=None``).
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(**kwargs):
+    """Build the installed jaxlib's TPU compiler-params object (or None)."""
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None)
+    return cls(**kwargs) if cls is not None else None

@@ -94,6 +94,13 @@ def main() -> None:
     ap.add_argument("--device-model", default="tpu-v5e",
                     help="continuous path: core/device_models entry used to "
                          "price admission")
+    ap.add_argument("--calibrated-cache", default=None, metavar="PATH",
+                    help="price admission on a profiling-calibrated device "
+                         "model fitted from this profile cache "
+                         "(repro.profiling) instead of nominal constants")
+    ap.add_argument("--calibrated-engine", default="xla",
+                    help="engine whose measurements to calibrate from when "
+                         "--calibrated-cache is given")
     args = ap.parse_args()
 
     arch = registry.get(args.arch)
@@ -136,18 +143,53 @@ def main() -> None:
         gen_lens=(max(args.gen_len // 8, 1), max(args.gen_len // 2, 1),
                   args.gen_len),
         seed=1)
+    device_model = None
+    if args.calibrated_cache is not None:
+        import os
+
+        from ..core.engines import ENGINES_BY_NAME
+        from ..profiling import Measurement, ProfileCache, calibrate_engine
+        if not os.path.exists(args.calibrated_cache):
+            raise SystemExit(
+                f"[serve] --calibrated-cache {args.calibrated_cache}: no "
+                f"such file (run `python -m repro.launch.profile` first)")
+        cache = ProfileCache.load(args.calibrated_cache)
+        eng = ENGINES_BY_NAME[args.calibrated_engine]
+        ms = [Measurement.from_dict(d)
+              for d in cache.measurements(engine=eng.name)]
+        if not ms:
+            n_stale = len(cache.measurements(engine=eng.name, stale=True))
+            raise SystemExit(
+                f"[serve] {args.calibrated_cache} has no measurements for "
+                f"engine {eng.name} under this environment "
+                f"({n_stale} from other jax versions/backends; re-profile "
+                f"here or pass a matching cache)")
+        device_model = calibrate_engine(eng, ms, register=True)
+        print(f"[serve] admission priced on {device_model.name} "
+              f"({device_model.n_measurements} measurements, kinds "
+              f"{sorted(device_model.throughput)}; other kinds fall back to "
+              f"{device_model.base_efficiency:.2f} x peak)")
     engine = EngineLoop(
         cfg, params, n_slots=args.slots, max_seq=max_len,
-        device_name=args.device_model,
+        device_name=args.device_model, device_model=device_model,
         step_slo_s=None if args.step_slo_ms is None
         else args.step_slo_ms / 1e3)
     with mesh:
         metrics = engine.run(requests)
     print(f"[serve] token budget {engine.batcher.token_budget}/{args.slots} "
-          f"slots (device model {args.device_model})")
+          f"slots (device model {engine.batcher.device_name})")
     for k, v in metrics.summary().items():
         val = f"{v:.4f}" if isinstance(v, float) else str(v)
         print(f"[serve] {k:>22}: {val}", flush=True)
+    # KV-pool ledger + admission accounting (end-of-run state of the block
+    # ledger, plus what the batcher did to the queue over the whole run)
+    for k, v in engine.pool.stats().items():
+        val = f"{v:.4f}" if isinstance(v, float) else str(v)
+        print(f"[serve] kv_pool.{k:>15}: {val}", flush=True)
+    b = engine.batcher
+    print(f"[serve] admission: {b.n_admitted} admitted, "
+          f"{b.n_rejected} rejected (deadline/oversize), "
+          f"{b.n_deferred} deferrals (budget or pool pressure)", flush=True)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,167 @@
+"""Microbenchmark harness: time any buildable engine on any LayerSpec.
+
+The measurement discipline is the usual JAX one:
+
+* build the engine callable once, ``jax.jit`` it, and feed device-committed
+  inputs so compile time and H2D transfers stay out of the timed region;
+* ``warmup`` untimed calls (first triggers compilation) with
+  ``block_until_ready`` so the async dispatch queue is drained;
+* ``repeats`` timed calls, each individually synchronized, reduced to
+  **median + IQR** (robust to scheduler noise; a mean would let one
+  preempted repeat poison the calibration).
+
+A measurement records everything the calibrator and the measured-pricing
+scheduler need: the spec fingerprint, achieved time statistics, FLOPs, and
+the (jax version, backend) environment it is valid under.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.engines import ExecutionEngine, init_layer_params
+from ..core.layer_model import (ConvSpec, FCSpec, LayerSpec, NetworkSpec,
+                                NormSpec, PoolSpec)
+from . import cache as cache_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class Measurement:
+    """One (layer spec, engine) timing under one environment."""
+
+    layer: str
+    kind: str
+    engine: str
+    batch: int
+    dtype: str
+    repeats: int
+    t_median: float              # seconds
+    t_iqr: float                 # interquartile range of the repeats
+    t_min: float
+    t_mean: float
+    flops: int                   # forward FLOPs at `batch`
+    fingerprint: str
+    jax_version: str
+    backend: str
+
+    @property
+    def achieved_flops(self) -> float:
+        """Measured FLOP/s (the quantity the calibrator fits)."""
+        return self.flops / self.t_median if self.t_median > 0 else 0.0
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Measurement":
+        return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls)})
+
+
+def make_input(spec: LayerSpec, batch: int = 1,
+               dtype=jnp.float32) -> jax.Array:
+    """Synthesize the layer's forward input from its declarative tuple."""
+    if isinstance(spec, (ConvSpec, NormSpec, PoolSpec)):
+        h, w, c = spec.m_i
+        shape = (batch, h, w, c)
+    elif isinstance(spec, FCSpec):
+        shape = (batch,) + tuple(spec.m_i)
+    else:
+        raise NotImplementedError(
+            f"no input synthesizer for {type(spec).__name__}")
+    key = jax.random.PRNGKey(0)
+    return jax.random.normal(key, shape, dtype)
+
+
+def time_layer(
+    engine: ExecutionEngine,
+    spec: LayerSpec,
+    *,
+    batch: int = 1,
+    dtype=jnp.float32,
+    warmup: int = 2,
+    repeats: int = 5,
+) -> Measurement:
+    """Measure one layer on one buildable engine (compile excluded)."""
+    if not engine.buildable:
+        raise ValueError(f"engine {engine.name} is cost-only; nothing to "
+                         "measure (the paper devices live in device_models)")
+    if warmup < 1 or repeats < 1:
+        raise ValueError("warmup and repeats must both be >= 1")
+    fn = jax.jit(engine.build(spec))
+    params = init_layer_params(spec, jax.random.PRNGKey(1), dtype)
+    x = make_input(spec, batch, dtype)
+    x.block_until_ready()
+
+    for _ in range(warmup):
+        fn(x, params).block_until_ready()
+    times = np.empty(repeats)
+    for i in range(repeats):
+        t0 = time.perf_counter()
+        fn(x, params).block_until_ready()
+        times[i] = time.perf_counter() - t0
+
+    q25, q50, q75 = np.percentile(times, (25, 50, 75))
+    env = cache_lib.environment()
+    dtype_name = jnp.dtype(dtype).name
+    return Measurement(
+        layer=spec.name, kind=spec.kind, engine=engine.name,
+        batch=batch, dtype=dtype_name, repeats=repeats,
+        t_median=float(q50), t_iqr=float(q75 - q25),
+        t_min=float(times.min()), t_mean=float(times.mean()),
+        flops=spec.flops(batch),
+        fingerprint=cache_lib.fingerprint(spec, batch, dtype_name),
+        jax_version=env["jax_version"], backend=env["backend"],
+    )
+
+
+def profile_network(
+    net: Iterable[LayerSpec] | NetworkSpec,
+    engines: Sequence[ExecutionEngine],
+    *,
+    batch: int = 1,
+    dtype=jnp.float32,
+    warmup: int = 2,
+    repeats: int = 5,
+    cache: Optional[cache_lib.ProfileCache] = None,
+    measure_on_miss: bool = True,
+) -> List[Measurement]:
+    """Profile every (layer, buildable engine) pair, cache-aware.
+
+    Cache hits (same fingerprint/engine/jax/backend) are returned without
+    re-measuring; misses are measured and written back to ``cache`` when
+    ``measure_on_miss`` (otherwise skipped).
+    """
+    specs = tuple(net)                   # net may be a one-shot iterable
+    dtype_name = jnp.dtype(dtype).name
+    out: List[Measurement] = []
+    for engine in engines:
+        if not engine.buildable:
+            continue
+        for spec in specs:
+            if not engine.supports(spec):
+                continue
+            if cache is not None:
+                hit = cache.get(spec, engine.name, batch=batch,
+                                dtype=dtype_name)
+                if hit is not None:
+                    out.append(Measurement.from_dict(hit))
+                    continue
+            if not measure_on_miss:
+                continue
+            try:
+                m = time_layer(engine, spec, batch=batch, dtype=dtype,
+                               warmup=warmup, repeats=repeats)
+            except NotImplementedError:
+                # the engine registry advertises kinds (attention, mlp, ...)
+                # whose builders/input synthesizers are not implemented yet;
+                # skip those pairs rather than abort the whole sweep
+                continue
+            if cache is not None:
+                cache.put(m)
+            out.append(m)
+    return out

@@ -1,0 +1,219 @@
+"""Persistent profile cache: measured layer timings keyed by environment.
+
+CNNLab's middleware knows its accelerators because it *measured* them; the
+cache is where those measurements live between runs.  Each entry is one
+:class:`~repro.profiling.bench.Measurement` keyed by
+
+    (layer-spec fingerprint, engine, jax version, backend)
+
+so a cache written on one jax/backend combination never silently prices a
+plan on another: lookups only return entries whose environment matches the
+running process, and :meth:`ProfileCache.invalidate_stale` drops the rest.
+
+On-disk format (``schema`` guards future layout changes)::
+
+    {"schema": 1, "entries": {"<key>": {<measurement dict>}, ...}}
+
+``python -m repro.profiling.cache --validate PATH`` checks a cache file
+against the schema (used by CI after the profiling smoke step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Dict, List, Optional
+
+import jax
+
+from ..core.layer_model import LayerSpec
+
+SCHEMA_VERSION = 1
+
+# measurement dict fields every entry must carry (mirrors bench.Measurement)
+REQUIRED_FIELDS = (
+    "layer", "kind", "engine", "batch", "dtype", "repeats",
+    "t_median", "t_iqr", "t_min", "t_mean", "flops",
+    "fingerprint", "jax_version", "backend",
+)
+
+DEFAULT_CACHE_PATH = os.environ.get("REPRO_PROFILE_CACHE",
+                                    "profile_cache.json")
+
+
+def environment() -> Dict[str, str]:
+    """The (jax version, backend) pair measurements are valid under."""
+    return {"jax_version": jax.__version__,
+            "backend": jax.default_backend()}
+
+
+def fingerprint(spec: LayerSpec, batch: int, dtype: str) -> str:
+    """Stable digest of a layer spec + measurement shape.
+
+    Hashes the spec's declarative tuple (type + all dataclass fields), the
+    batch and the dtype — everything that determines the timed computation.
+    """
+    payload = json.dumps(
+        {"type": type(spec).__name__,
+         "fields": {f.name: repr(getattr(spec, f.name))
+                    for f in dataclasses.fields(spec)},
+         "batch": int(batch), "dtype": str(dtype)},
+        sort_keys=True)
+    return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+
+def entry_key(fp: str, engine: str, env: Optional[Dict[str, str]] = None) -> str:
+    env = env or environment()
+    return "|".join((fp, engine, env["jax_version"], env["backend"]))
+
+
+def validate_dict(data) -> List[str]:
+    """Schema check for a loaded cache dict.  Returns a list of problems
+    (empty == valid)."""
+    errors: List[str] = []
+    if not isinstance(data, dict):
+        return [f"cache root must be an object, got {type(data).__name__}"]
+    if data.get("schema") != SCHEMA_VERSION:
+        errors.append(f"schema must be {SCHEMA_VERSION}, "
+                      f"got {data.get('schema')!r}")
+    entries = data.get("entries")
+    if not isinstance(entries, dict):
+        return errors + ["entries must be an object"]
+    for key, m in entries.items():
+        if not isinstance(m, dict):
+            errors.append(f"{key}: entry must be an object")
+            continue
+        missing = [f for f in REQUIRED_FIELDS if f not in m]
+        if missing:
+            errors.append(f"{key}: missing fields {missing}")
+            continue
+        want = entry_key(m["fingerprint"], m["engine"],
+                         {"jax_version": m["jax_version"],
+                          "backend": m["backend"]})
+        if key != want:
+            errors.append(f"{key}: key does not match entry ({want})")
+        for f in ("t_median", "t_iqr", "t_min", "t_mean"):
+            if not (isinstance(m[f], (int, float)) and m[f] >= 0):
+                errors.append(f"{key}: {f} must be a non-negative number")
+    return errors
+
+
+class ProfileCache:
+    """In-memory view of the persistent cache, environment-scoped lookups."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.entries: Dict[str, dict] = {}
+
+    # ---- persistence -----------------------------------------------------
+    @classmethod
+    def load(cls, path: str, *, strict: bool = True) -> "ProfileCache":
+        """Read a cache file.  Missing file -> empty cache (profiling always
+        has a cold-start path); malformed file raises when ``strict``."""
+        cache = cls(path)
+        if not os.path.exists(path):
+            return cache
+        with open(path) as f:
+            data = json.load(f)
+        errors = validate_dict(data)
+        if errors:
+            if strict:
+                raise ValueError(f"invalid profile cache {path}: {errors}")
+            return cache
+        cache.entries = dict(data["entries"])
+        return cache
+
+    def save(self, path: Optional[str] = None) -> str:
+        path = path or self.path or DEFAULT_CACHE_PATH
+        self.path = path
+        parent = os.path.dirname(path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump({"schema": SCHEMA_VERSION, "entries": self.entries},
+                      f, indent=2, sort_keys=True)
+        return path
+
+    # ---- lookups (current environment only) ------------------------------
+    def get(self, spec: LayerSpec, engine: str, *, batch: int = 1,
+            dtype: str = "float32") -> Optional[dict]:
+        return self.entries.get(
+            entry_key(fingerprint(spec, batch, dtype), engine))
+
+    def put(self, measurement) -> None:
+        m = (measurement.to_dict() if hasattr(measurement, "to_dict")
+             else dict(measurement))
+        self.entries[entry_key(
+            m["fingerprint"], m["engine"],
+            {"jax_version": m["jax_version"], "backend": m["backend"]})] = m
+
+    def measurements(self, *, engine: Optional[str] = None,
+                     stale: bool = False) -> List[dict]:
+        """Entries for the current environment (all envs when ``stale``)."""
+        env = environment()
+        out = []
+        for m in self.entries.values():
+            if engine is not None and m["engine"] != engine:
+                continue
+            if not stale and (m["jax_version"] != env["jax_version"]
+                              or m["backend"] != env["backend"]):
+                continue
+            out.append(m)
+        return out
+
+    # ---- maintenance -----------------------------------------------------
+    def merge(self, other: "ProfileCache") -> int:
+        """Fold another cache in (other wins on key collision).  Returns the
+        number of new/updated entries."""
+        changed = 0
+        for key, m in other.entries.items():
+            if self.entries.get(key) != m:
+                self.entries[key] = dict(m)
+                changed += 1
+        return changed
+
+    def invalidate(self, *, engine: Optional[str] = None) -> int:
+        """Drop entries (optionally only one engine's).  Returns count."""
+        keep = {k: m for k, m in self.entries.items()
+                if engine is not None and m["engine"] != engine}
+        dropped = len(self.entries) - len(keep)
+        self.entries = keep
+        return dropped
+
+    def invalidate_stale(self) -> int:
+        """Drop entries measured under a different jax version / backend."""
+        env = environment()
+        keep = {k: m for k, m in self.entries.items()
+                if m["jax_version"] == env["jax_version"]
+                and m["backend"] == env["backend"]}
+        dropped = len(self.entries) - len(keep)
+        self.entries = keep
+        return dropped
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+
+def _main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="profile-cache maintenance (schema validation)")
+    ap.add_argument("--validate", metavar="PATH", required=True,
+                    help="check PATH against the cache JSON schema")
+    args = ap.parse_args()
+    with open(args.validate) as f:
+        data = json.load(f)
+    errors = validate_dict(data)
+    if errors:
+        for e in errors:
+            print(f"[cache] INVALID: {e}")
+        raise SystemExit(1)
+    n = len(data["entries"])
+    print(f"[cache] {args.validate}: schema v{data['schema']} OK, "
+          f"{n} entr{'y' if n == 1 else 'ies'}")
+
+
+if __name__ == "__main__":
+    _main()

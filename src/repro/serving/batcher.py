@@ -63,9 +63,16 @@ def decode_network_spec(cfg: ModelConfig, kv_len: int) -> NetworkSpec:
 
 def step_time_model(cfg: ModelConfig, kv_len: int, n_tokens: int,
                     device_name: str = "tpu-v5e",
-                    dtype_bytes: int = 2) -> float:
-    """Modeled wall time of one engine step carrying `n_tokens` tokens."""
-    device = device_models.get(device_name)
+                    dtype_bytes: int = 2,
+                    device: Optional[device_models.DeviceModel] = None
+                    ) -> float:
+    """Modeled wall time of one engine step carrying `n_tokens` tokens.
+
+    ``device`` overrides the registry lookup — this is how admission prices
+    on a profiling-calibrated model (``repro.profiling.calibrate``) instead
+    of the nominal constants."""
+    if device is None:
+        device = device_models.get(device_name)
     net = decode_network_spec(cfg, kv_len)
     return sum(layer_cost(l, device, batch=n_tokens,
                           dtype_bytes=dtype_bytes).t_total for l in net)
@@ -73,12 +80,15 @@ def step_time_model(cfg: ModelConfig, kv_len: int, n_tokens: int,
 
 def token_budget_for_slo(cfg: ModelConfig, kv_len: int, n_slots: int,
                          step_slo_s: float,
-                         device_name: str = "tpu-v5e") -> int:
+                         device_name: str = "tpu-v5e",
+                         device: Optional[device_models.DeviceModel] = None
+                         ) -> int:
     """Largest per-step token count whose modeled step time meets the SLO
     (always >= 1: a budget that admits nothing serves nothing)."""
     budget = 1
     for k in range(2, n_slots + 1):
-        if step_time_model(cfg, kv_len, k, device_name) > step_slo_s:
+        if step_time_model(cfg, kv_len, k, device_name,
+                           device=device) > step_slo_s:
             break
         budget = k
     return budget
@@ -95,21 +105,35 @@ class ContinuousBatcher:
 
     def __init__(self, cfg: ModelConfig, pool: KVPool, *,
                  device_name: str = "tpu-v5e",
+                 device_model: Optional[device_models.DeviceModel] = None,
                  step_slo_s: Optional[float] = None,
                  token_budget: Optional[int] = None):
         self.cfg = cfg
         self.pool = pool
-        self.device_name = device_name
+        self.device_name = (device_model.name if device_model is not None
+                            else device_name)
+        self.device_model = device_model
         if token_budget is None:
             if step_slo_s is None:
                 token_budget = pool.n_slots
             else:
                 token_budget = token_budget_for_slo(
-                    cfg, pool.max_seq, pool.n_slots, step_slo_s, device_name)
+                    cfg, pool.max_seq, pool.n_slots, step_slo_s, device_name,
+                    device=device_model)
         if token_budget <= 0:
             raise ValueError("token_budget must be >= 1 (a budget that "
                              "admits nothing serves nothing)")
         self.token_budget = min(token_budget, pool.n_slots)
+        # cumulative admission accounting (surfaced by launch/serve.py)
+        self.n_admitted = 0
+        self.n_rejected = 0              # dropped: deadline passed / never fits
+        self._deferred_rids: set = set()
+
+    @property
+    def n_deferred(self) -> int:
+        """Distinct requests ever left queued by an admit pass (budget or
+        pool pressure) — comparable to the admitted/rejected counts."""
+        return len(self._deferred_rids)
 
     def admit(self, queue: List[Request], n_active: int,
               now: float) -> AdmissionDecision:
@@ -142,4 +166,7 @@ class ContinuousBatcher:
             req.state = RequestState.PREFILL
             req.t_admitted = now
             admitted.append(queue.pop(i))
+        self.n_admitted += len(admitted)
+        self.n_rejected += len(dropped)
+        self._deferred_rids.update(r.rid for r in queue)
         return AdmissionDecision(admitted=admitted, dropped=dropped)

@@ -126,6 +126,7 @@ class EngineLoop:
                  max_seq: int, block_size: int = 16,
                  total_blocks: Optional[int] = None,
                  device_name: str = "tpu-v5e",
+                 device_model=None,
                  step_slo_s: Optional[float] = None,
                  token_budget: Optional[int] = None):
         self.cfg = cfg
@@ -133,7 +134,8 @@ class EngineLoop:
         self.pool = KVPool(n_slots, max_seq, block_size=block_size,
                            total_blocks=total_blocks)
         self.batcher = ContinuousBatcher(
-            cfg, self.pool, device_name=device_name, step_slo_s=step_slo_s,
+            cfg, self.pool, device_name=device_name,
+            device_model=device_model, step_slo_s=step_slo_s,
             token_budget=token_budget)
         self.cache = T.init_slot_cache(cfg, n_slots, max_seq)
         self.max_prompt = max_seq

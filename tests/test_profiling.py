@@ -1,0 +1,313 @@
+"""Profiling runtime: cache round-trip + environment invalidation,
+calibrator error reduction, and measured-pricing scheduler agreement."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import engines as engines_lib
+from repro.core import scheduler
+from repro.core.cost_model import layer_cost
+from repro.core.layer_model import ConvSpec, FCSpec, NetworkSpec
+from repro.core.plan import compile_plan, init_network_params
+from repro.launch.profile import tiny_net
+from repro.models import transformer as T
+from repro.profiling import (CalibratedDeviceModel, MeasuredPricer,
+                             Measurement, ProfileCache,
+                             analytic_predicted_time, calibrate_engine,
+                             calibration_report, environment, fingerprint,
+                             profile_network, time_layer, validate_dict)
+from repro.serving import ContinuousBatcher, KVPool, step_time_model
+
+XLA = engines_lib.XLA_ENGINE
+TINY_FC = FCSpec("TFC", m_i=(8, 8, 8), k_o=16)
+
+
+def _measurement(spec, engine, t_median, *, batch=1, env=None):
+    env = env or environment()
+    return Measurement(
+        layer=spec.name, kind=spec.kind, engine=engine, batch=batch,
+        dtype="float32", repeats=3, t_median=t_median, t_iqr=t_median * 0.1,
+        t_min=t_median * 0.9, t_mean=t_median, flops=spec.flops(batch),
+        fingerprint=fingerprint(spec, batch, "float32"),
+        jax_version=env["jax_version"], backend=env["backend"])
+
+
+# ------------------------------------------------------------ fingerprint
+def test_fingerprint_stable_and_sensitive():
+    a = fingerprint(TINY_FC, 1, "float32")
+    assert a == fingerprint(FCSpec("TFC", m_i=(8, 8, 8), k_o=16), 1,
+                            "float32")
+    assert a != fingerprint(FCSpec("TFC", m_i=(8, 8, 8), k_o=32), 1,
+                            "float32")
+    assert a != fingerprint(TINY_FC, 2, "float32")
+    assert a != fingerprint(TINY_FC, 1, "bfloat16")
+
+
+# ------------------------------------------------------------------ cache
+def test_cache_roundtrip(tmp_path):
+    path = str(tmp_path / "cache.json")
+    cache = ProfileCache(path)
+    m = _measurement(TINY_FC, "xla", 1e-3)
+    cache.put(m)
+    cache.save()
+    loaded = ProfileCache.load(path)
+    hit = loaded.get(TINY_FC, "xla")
+    assert hit is not None
+    assert Measurement.from_dict(hit) == m
+    assert validate_dict(json.load(open(path))) == []
+
+
+def test_cache_invalidation_on_jax_version_change(tmp_path):
+    path = str(tmp_path / "cache.json")
+    cache = ProfileCache(path)
+    stale_env = {"jax_version": "0.0.1", "backend": environment()["backend"]}
+    cache.put(_measurement(TINY_FC, "xla", 1e-3, env=stale_env))
+    cache.save()
+    loaded = ProfileCache.load(path)
+    assert len(loaded) == 1
+    # lookups are environment-scoped: the stale entry is invisible ...
+    assert loaded.get(TINY_FC, "xla") is None
+    assert loaded.measurements() == []
+    # ... and invalidate_stale garbage-collects it
+    assert loaded.invalidate_stale() == 1
+    assert len(loaded) == 0
+
+
+def test_cache_merge_and_invalidate(tmp_path):
+    a, b = ProfileCache(), ProfileCache()
+    a.put(_measurement(TINY_FC, "xla", 1e-3))
+    b.put(_measurement(TINY_FC, "pallas", 2e-3))
+    b.put(_measurement(TINY_FC, "xla", 5e-3))      # collision: b wins
+    assert a.merge(b) == 2
+    assert len(a) == 2
+    assert a.get(TINY_FC, "xla")["t_median"] == 5e-3
+    assert a.invalidate(engine="pallas") == 1
+    assert a.invalidate() == 1                     # drop everything
+
+
+def test_cache_schema_validation_catches_corruption():
+    assert validate_dict([]) != []
+    assert validate_dict({"schema": 99, "entries": {}}) != []
+    m = _measurement(TINY_FC, "xla", 1e-3).to_dict()
+    good = {"schema": 1, "entries": {}}
+    cache = ProfileCache()
+    cache.put(Measurement.from_dict(m))
+    good["entries"] = cache.entries
+    assert validate_dict(good) == []
+    bad = json.loads(json.dumps(good))
+    next(iter(bad["entries"].values())).pop("t_median")
+    assert validate_dict(bad) != []
+    neg = json.loads(json.dumps(good))
+    next(iter(neg["entries"].values()))["t_median"] = -1.0
+    assert validate_dict(neg) != []
+
+
+# ------------------------------------------------------------- harness
+def test_time_layer_smoke():
+    m = time_layer(XLA, TINY_FC, warmup=1, repeats=3)
+    assert m.engine == "xla" and m.kind == "fc" and m.repeats == 3
+    assert m.t_median > 0 and m.t_min <= m.t_median
+    assert m.flops == TINY_FC.flops(1)
+    assert m.achieved_flops > 0
+    assert m.jax_version == jax.__version__
+
+
+def test_time_layer_rejects_cost_only_engine():
+    with pytest.raises(ValueError, match="cost-only"):
+        time_layer(engines_lib.K40_ENGINE, TINY_FC)
+
+
+def test_profile_network_uses_cache(tmp_path):
+    net = tiny_net()
+    cache = ProfileCache(str(tmp_path / "c.json"))
+    first = profile_network(net, [XLA], warmup=1, repeats=2, cache=cache)
+    assert len(first) == len(net)
+    # second pass must be pure cache: measure_on_miss=False still returns all
+    second = profile_network(net, [XLA], cache=cache, measure_on_miss=False)
+    assert second == first
+
+
+# ------------------------------------------------------------ calibrator
+def test_calibrator_reduces_error_on_synthetic_timings():
+    net = tiny_net()
+    # synthetic ground truth: each kind runs at a constant achieved rate
+    # very different from the analytic model's belief
+    rates = {"conv": 3e9, "fc": 1e9}
+    ms = [_measurement(s, "xla", s.flops(1) / rates[s.kind])
+          for s in net]
+    rep = calibration_report(XLA, list(net), ms)
+    assert rep.calibrated_mape < rep.analytic_mape
+    assert rep.calibrated_mape < 1e-9        # exact on rate-constant data
+    for kind, fitted in rep.model.throughput.items():
+        assert fitted == pytest.approx(rates[kind])
+
+
+def test_calibrated_model_drops_into_cost_model():
+    ms = [_measurement(TINY_FC, "xla", 1e-3)]
+    model = calibrate_engine(XLA, ms)
+    assert isinstance(model, CalibratedDeviceModel) and not model.analytic
+    cost = layer_cost(TINY_FC, model)
+    assert cost.t_total == pytest.approx(1e-3)
+    # unmeasured kinds fall back to the engine's nominal efficiency, not
+    # raw peak (an under-profiled cache must not look infinitely fast)
+    assert model.achieved_flops("conv") == pytest.approx(
+        XLA.efficiency * XLA.device.peak_flops)
+
+
+def test_calibrated_fallback_keeps_roofline_memory_term():
+    """Unmeasured kinds on a calibrated model price with the FULL roofline
+    (memory term included), not compute-only optimism — otherwise serving
+    admission on memory-bound decode would blow its SLO."""
+    from repro.core.layer_model import AttentionSpec
+    model = calibrate_engine(XLA, [_measurement(TINY_FC, "xla", 1e-3)])
+    attn = AttentionSpec("attn", d_model=256, n_heads=4, n_kv_heads=2,
+                         seq=1, kv_len=2048)
+    assert model.analytic_for("attention") and not model.analytic_for("fc")
+    cal = layer_cost(attn, model, dtype_bytes=2)
+    nominal = layer_cost(attn, XLA.device, dtype_bytes=2)
+    assert cal.t_memory == pytest.approx(nominal.t_memory)
+    assert cal.t_total >= nominal.t_total       # efficiency <= 1 only slows
+
+
+def test_calibrate_engine_registers_in_device_registry():
+    from repro.core import device_models as dm
+    model = calibrate_engine(XLA, [_measurement(TINY_FC, "xla", 1e-3)],
+                             register=True)
+    try:
+        assert dm.get(model.name) is model
+    finally:
+        dm.REGISTRY.pop(model.name, None)
+
+
+# ------------------------------------------------- measured-price scheduling
+def test_measured_plan_agrees_with_analytic_when_measurements_match():
+    """price="measured" with a cache whose timings equal the analytic
+    model's predictions must reproduce the analytic plan exactly."""
+    net = tiny_net()
+    cache = ProfileCache()
+    for eng in engines_lib.DEFAULT_ENGINES:
+        for spec in net:
+            cache.put(_measurement(
+                spec, eng.name, analytic_predicted_time(spec, eng)))
+    pricer = MeasuredPricer(cache, measure_on_miss=False, autosave=False)
+    plan_a = scheduler.schedule(net, engines_lib.DEFAULT_ENGINES)
+    plan_m = scheduler.schedule(net, engines_lib.DEFAULT_ENGINES,
+                                price="measured", pricer=pricer)
+    assert plan_a.pricing == "analytic" and plan_m.pricing == "measured"
+    assert [a.engine for a in plan_a.assignments] == \
+        [a.engine for a in plan_m.assignments]
+    for a, b in zip(plan_a.assignments, plan_m.assignments):
+        assert b.cost.t_total == pytest.approx(a.cost.t_total)
+    assert pricer.hits == len(net) * len(engines_lib.DEFAULT_ENGINES)
+
+
+def test_schedule_rejects_unknown_price():
+    with pytest.raises(ValueError, match="pricing"):
+        scheduler.schedule(tiny_net(), engines_lib.DEFAULT_ENGINES,
+                           price="vibes")
+
+
+def test_measured_pricer_measures_on_miss_and_persists(tmp_path):
+    path = str(tmp_path / "c.json")
+    pricer = MeasuredPricer(ProfileCache(path), warmup=1, repeats=2)
+    cost = pricer.price(TINY_FC, XLA)
+    assert cost is not None and cost.t_total > 0
+    assert (pricer.hits, pricer.misses) == (0, 1)
+    assert ProfileCache.load(path).get(TINY_FC, "xla") is not None
+    pricer.price(TINY_FC, XLA)
+    assert (pricer.hits, pricer.misses) == (1, 1)
+    # unmeasurable requests decline -> scheduler falls back to analytic
+    assert pricer.price(TINY_FC, XLA, direction="bwd") is None
+    assert pricer.price(TINY_FC, XLA, n_chips=2) is None
+    assert pricer.price(TINY_FC, engines_lib.K40_ENGINE) is None
+
+
+def test_plan_records_operating_point_and_reprice_preserves_it():
+    from repro.core.plan import reprice_plan
+    net = tiny_net()
+    plan = scheduler.schedule(net, engines_lib.DEFAULT_ENGINES, batch=3)
+    assert (plan.batch, plan.dtype_bytes) == (3, 4)
+    cache = ProfileCache()
+    for eng in engines_lib.DEFAULT_ENGINES:
+        for spec in net:
+            cache.put(_measurement(spec, eng.name, 1e-3, batch=3))
+    pricer = MeasuredPricer(cache, measure_on_miss=False, autosave=False)
+    replan = reprice_plan(plan, pricer=pricer)
+    assert (replan.batch, replan.dtype_bytes) == (3, 4)
+    assert pricer.hits > 0                       # priced at the plan's batch
+
+
+def test_reprice_reconsiders_all_buildable_engines():
+    """An analytic plan that collapsed onto one engine can still move when
+    measurements say another buildable engine is faster."""
+    net = tiny_net()
+    plan = scheduler.schedule(net, [engines_lib.XLA_ENGINE])
+    assert {a.engine for a in plan.assignments} == {"xla"}
+    cache = ProfileCache()
+    for spec in net:                             # pallas measures 10x faster
+        cache.put(_measurement(spec, "xla", 1e-2))
+        cache.put(_measurement(spec, "pallas", 1e-3))
+    pricer = MeasuredPricer(cache, measure_on_miss=False, autosave=False)
+    fn = compile_plan(plan, price="measured", pricer=pricer)
+    assert {a.engine for a in fn.plan.assignments} == {"pallas"}
+
+
+def test_pricer_derives_dtype_from_dtype_bytes():
+    cache = ProfileCache()
+    cache.put(_measurement(TINY_FC, "xla", 1e-3))      # float32 measurement
+    pricer = MeasuredPricer(cache, measure_on_miss=False, autosave=False)
+    assert pricer.price(TINY_FC, XLA, dtype_bytes=4) is not None
+    # a bf16-priced schedule must not be fed float32 timings
+    assert pricer.price(TINY_FC, XLA, dtype_bytes=2) is None
+    assert pricer.price(TINY_FC, XLA, dtype_bytes=3) is None
+
+
+def test_compile_plan_measured_end_to_end(tmp_path):
+    net = tiny_net()
+    pricer = MeasuredPricer(ProfileCache(str(tmp_path / "c.json")),
+                            warmup=1, repeats=2)
+    plan = scheduler.schedule(net, engines_lib.DEFAULT_ENGINES)
+    fn = compile_plan(plan, price="measured", pricer=pricer)
+    assert fn.plan.pricing == "measured"
+    params = init_network_params(net, jax.random.PRNGKey(0))
+    y = fn(jnp.ones((1, 8, 8, 3)), params)
+    assert y.shape == (1, 16)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    # already-measured plans are not re-priced
+    fn2 = compile_plan(fn.plan, price="measured", pricer=pricer)
+    assert fn2.plan is fn.plan
+
+
+# --------------------------------------------- calibrated admission pricing
+def test_batcher_prices_admission_on_calibrated_model():
+    cfg = T.ModelConfig(
+        name="prof-tiny", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+        d_ff=64, vocab=64, attention_impl="dot", remat=False)
+    model = calibrate_engine(XLA, [_measurement(TINY_FC, "xla", 1e-3)])
+    nominal = step_time_model(cfg, 64, 4)
+    calibrated = step_time_model(cfg, 64, 4, device=model)
+    assert nominal > 0 and calibrated > 0
+    pool = KVPool(n_slots=4, max_seq=64)
+    b = ContinuousBatcher(cfg, pool, device_model=model, step_slo_s=10.0)
+    assert b.device_name == model.name
+    assert 1 <= b.token_budget <= 4
+    assert (b.n_admitted, b.n_rejected, b.n_deferred) == (0, 0, 0)
+
+
+def test_deferred_counts_unique_requests():
+    from repro.serving import Request
+    cfg = T.ModelConfig(
+        name="prof-tiny2", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+        d_ff=64, vocab=64, attention_impl="dot", remat=False)
+    pool = KVPool(n_slots=2, max_seq=32)
+    b = ContinuousBatcher(cfg, pool, token_budget=1)
+    import numpy as np
+    queue = [Request(rid=i, prompt=np.array([1], np.int32), max_new_tokens=4)
+             for i in range(3)]
+    b.admit(queue, n_active=0, now=0.0)          # admits 1, defers 2
+    assert (b.n_admitted, b.n_deferred) == (1, 2)
+    b.admit(queue, n_active=1, now=0.0)          # same 2 wait again
+    assert b.n_deferred == 2                     # unique requests, not events

@@ -17,7 +17,6 @@ the moment a request finishes, which is where the speedup comes from.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import time
 from typing import Dict, List
@@ -28,7 +27,8 @@ import numpy as np
 
 from repro.launch.serve import Server
 from repro.models import transformer as T
-from repro.serving import EngineLoop, ServeMetrics, synthetic_workload
+from repro.serving import (DisaggregatedEngineLoop, EngineLoop, ServeMetrics,
+                           place_phases, synthetic_workload)
 
 SMOKE_CFG = T.ModelConfig(
     name="bench-serving-smoke", n_layers=4, d_model=96, n_heads=6,
@@ -96,6 +96,59 @@ def run_continuous(cfg, params, requests, *, slots: int, max_len: int
     return engine.run(requests)
 
 
+def run_disaggregation(cfg, params, *, n_requests: int, slots: int,
+                       max_len: int, seed: int) -> Dict:
+    """Disaggregated vs colocated on the same saturation workload + the
+    placement analyzer's call on the paper engine set.
+
+    Both loops run the same engine pair (the buildable XLA engine for both
+    phases), so per-request outputs must be bit-identical — the hand-off
+    is exact state migration, not an approximation.  The tok/s ratio is
+    the measured cost of the phase boundary on this host; the placement
+    table is what the trade-off analyzer would pick per objective."""
+    colo_reqs = _workload(n_requests, 1e9, cfg.vocab, seed)
+    dis_reqs = _workload(n_requests, 1e9, cfg.vocab, seed)
+
+    colo = EngineLoop(cfg, params, n_slots=slots, max_seq=max_len)
+    colo.warmup()
+    c_metrics = colo.run(colo_reqs)
+
+    dis = DisaggregatedEngineLoop(
+        cfg, params, n_prefill_slots=max(slots // 2, 1),
+        n_decode_slots=slots, max_seq=max_len)
+    dis.warmup()
+    d_metrics = dis.run(dis_reqs)
+
+    bit_identical = ({r.rid: r.output for r in colo_reqs}
+                     == {r.rid: r.output for r in dis_reqs})
+    placements = {}
+    for objective in ("latency", "energy", "perf_density"):
+        d = place_phases(cfg, objective=objective,
+                         prompt_len=max(PROMPT_LENS),
+                         gen_len=max(GEN_LENS), batch=slots)
+        placements[objective] = {
+            "prefill_engine": d.prefill_engine,
+            "decode_engine": d.decode_engine,
+            "colocated": d.colocated,
+            "value": d.best.value,
+            "handoff_s": d.best.handoff.t_transfer,
+        }
+    c, dd = c_metrics.summary(), d_metrics.summary()
+    out = {
+        "colocated": c,
+        "disaggregated": dd,
+        "tok_per_s_ratio": dd["tok_per_s"] / c["tok_per_s"],
+        "bit_identical": bit_identical,
+        "handoff": dis.handoff.stats(),
+        "placement": placements,
+    }
+    print(f"[bench_serving] disaggregation: colocated {c['tok_per_s']:.1f} "
+          f"tok/s vs disaggregated {dd['tok_per_s']:.1f} tok/s "
+          f"({out['tok_per_s_ratio']:.2f}x, {dis.handoff.n_handoffs} "
+          f"handoffs, bit_identical={bit_identical})", flush=True)
+    return out
+
+
 def run_bench(*, n_requests: int, slots: int, rates: List[float],
               seed: int = 7) -> Dict:
     cfg = SMOKE_CFG
@@ -131,10 +184,14 @@ def run_bench(*, n_requests: int, slots: int, rates: List[float],
               f"{s['tok_per_s']:.1f} tok/s vs continuous "
               f"{c['tok_per_s']:.1f} tok/s -> {speedup:.2f}x "
               f"(bit_identical={bit_identical})", flush=True)
+    results["disaggregation"] = run_disaggregation(
+        cfg, params, n_requests=n_requests, slots=slots, max_len=max_len,
+        seed=seed)
     results["max_speedup"] = max(l["speedup_tok_per_s"]
                                  for l in results["loads"])
-    results["all_bit_identical"] = all(l["bit_identical"]
-                                       for l in results["loads"])
+    results["all_bit_identical"] = all(
+        [l["bit_identical"] for l in results["loads"]]
+        + [results["disaggregation"]["bit_identical"]])
     return results
 
 

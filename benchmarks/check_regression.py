@@ -1,0 +1,99 @@
+"""Benchmark regression gate: fresh BENCH_serving.json vs the committed one.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --baseline BENCH_serving.json --fresh /tmp/BENCH_serving.json
+
+Fails (exit 1) when the fresh run regresses >``--threshold`` (default 20%)
+on throughput at saturation.  Raw tok/s is not comparable across hosts
+(the committed baseline and a CI runner are different machines), so the
+default gate compares the *continuous-over-static speedup* at the highest
+offered rate — both paths run on the same host in the same process, so
+their ratio is a machine-normalized throughput measure.  ``--absolute``
+additionally gates raw tok/s for same-host comparisons.
+
+Correctness gates always apply: every load's continuous outputs must be
+bit-identical to static, and the disaggregated run's outputs must be
+bit-identical to colocated.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Tuple
+
+
+def saturation_load(results: dict) -> dict:
+    return max(results["loads"], key=lambda l: l["offered_rate_req_s"])
+
+
+def compare(baseline: dict, fresh: dict, *, threshold: float,
+            absolute: bool) -> List[Tuple[str, bool, str]]:
+    """Returns [(check name, ok, detail), ...]."""
+    checks: List[Tuple[str, bool, str]] = []
+    base_l, fresh_l = saturation_load(baseline), saturation_load(fresh)
+
+    base_s = base_l["speedup_tok_per_s"]
+    fresh_s = fresh_l["speedup_tok_per_s"]
+    floor = base_s * (1.0 - threshold)
+    checks.append((
+        "saturation speedup (continuous/static)",
+        fresh_s >= floor,
+        f"fresh {fresh_s:.2f}x vs baseline {base_s:.2f}x "
+        f"(floor {floor:.2f}x at {threshold:.0%} regression budget)"))
+
+    if absolute:
+        base_t = base_l["continuous"]["tok_per_s"]
+        fresh_t = fresh_l["continuous"]["tok_per_s"]
+        floor_t = base_t * (1.0 - threshold)
+        checks.append((
+            "saturation continuous tok/s (same-host)",
+            fresh_t >= floor_t,
+            f"fresh {fresh_t:.1f} vs baseline {base_t:.1f} "
+            f"(floor {floor_t:.1f})"))
+
+    checks.append(("all loads bit-identical to static",
+                   all(l["bit_identical"] for l in fresh["loads"]),
+                   f"{sum(l['bit_identical'] for l in fresh['loads'])}/"
+                   f"{len(fresh['loads'])} loads"))
+    dis = fresh.get("disaggregation")
+    if dis is not None:
+        checks.append(("disaggregated bit-identical to colocated",
+                       bool(dis["bit_identical"]),
+                       f"{dis['handoff']['n_handoffs']} handoffs, "
+                       f"{dis['handoff']['bytes_moved']} bytes"))
+    return checks
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="BENCH_serving.json",
+                    help="committed benchmark results (the reference)")
+    ap.add_argument("--fresh", required=True,
+                    help="freshly generated benchmark results to gate")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="allowed fractional regression (default 0.20)")
+    ap.add_argument("--absolute", action="store_true",
+                    help="also gate raw tok/s (only meaningful when "
+                         "baseline and fresh ran on the same host)")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    failed = False
+    for name, ok, detail in compare(baseline, fresh,
+                                    threshold=args.threshold,
+                                    absolute=args.absolute):
+        print(f"[check_regression] {'PASS' if ok else 'FAIL'}: "
+              f"{name} — {detail}")
+        failed |= not ok
+    if failed:
+        sys.exit(1)
+    print("[check_regression] OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,8 +6,7 @@ dryrun_results.json.
 import argparse
 import json
 
-from .bench_roofline import corrected_costs, model_flops_per_device, \
-    roofline_rows, PEAK_FLOPS
+from .bench_roofline import roofline_rows
 
 HBM_GB = 16.0
 

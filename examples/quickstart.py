@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engines, plan, scheduler, tradeoff
-from repro.core.device_models import DE5, K40, TPU_V5E
+from repro.core.device_models import DE5, K40
 from repro.core.layer_model import alexnet_full_spec
 
 # 1. the network: AlexNet declared as CNNLab layer tuples (paper Table I)

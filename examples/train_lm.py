@@ -10,11 +10,8 @@ is a single runnable script.
 """
 import argparse
 import dataclasses
-import subprocess
 import sys
 import time
-
-import jax
 
 from repro.models.transformer import ModelConfig, count_params
 

@@ -149,6 +149,53 @@ def network_cost(
 
 
 # ---------------------------------------------------------------------------
+# Offload overhead (the paper's PCIe sync, Fig. 5 step 4)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TransferCost:
+    """Cost of moving bytes between two engines' devices.
+
+    The paper's runtime pays a host-mediated synchronization whenever
+    adjacent stages run on different boards; we price it as the byte
+    payload at the slower of the two devices' link bandwidths (falling
+    back to memory bandwidth for devices that declare no interconnect).
+    Energy charges both devices at idle for the transfer — neither is
+    computing while the hand-off drains.
+    """
+
+    src: str
+    dst: str
+    bytes_moved: int
+    link_bw: float
+    t_transfer: float
+    energy_j: float
+
+
+def transfer_cost(
+    n_bytes: int,
+    src: DeviceModel,
+    dst: DeviceModel,
+    *,
+    link_bw: Optional[float] = None,
+) -> TransferCost:
+    """Price an engine-switch hand-off of ``n_bytes`` from ``src`` to ``dst``.
+
+    Same device -> free (XLA's shared 'virtual memory space', plan.py).
+    ``link_bw`` overrides the derived bandwidth (e.g. a measured PCIe rate
+    from the profiling runtime).
+    """
+    if src.name == dst.name:
+        return TransferCost(src=src.name, dst=dst.name, bytes_moved=0,
+                            link_bw=float("inf"), t_transfer=0.0, energy_j=0.0)
+    if link_bw is None:
+        link_bw = min(src.link_bw or src.mem_bw, dst.link_bw or dst.mem_bw)
+    t = n_bytes / link_bw if link_bw > 0 else float("inf")
+    return TransferCost(
+        src=src.name, dst=dst.name, bytes_moved=n_bytes, link_bw=link_bw,
+        t_transfer=t, energy_j=t * (src.power_idle + dst.power_idle))
+
+
+# ---------------------------------------------------------------------------
 # Objectives (what the user asks the middleware to optimize, §III.A)
 # ---------------------------------------------------------------------------
 def objective_value(cost: CostBreakdown, objective: str) -> float:

@@ -25,7 +25,7 @@ Calibration sources (all from the paper):
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping, Optional
+from typing import Mapping
 
 GiB = 1024 ** 3
 MiB = 1024 ** 2
@@ -158,7 +158,21 @@ DE5 = DeviceModel(
     frequency_hz=171.29e6,
 )
 
-REGISTRY = {m.name: m for m in (TPU_V5E, K40, K40_CUBLAS, K40_CUDNN, DE5)}
+# ---------------------------------------------------------------------------
+# Roofline variants of the paper boards.  The empirical K40/DE5 models only
+# know the CNN kinds the paper measured; for layer kinds the paper never ran
+# (attention, MLP, MoE, SSM — the serving phases) we price the same silicon
+# from first principles instead: peak FLOPs vs memory bandwidth, the 3-term
+# roofline the TPU model uses.  These are what phase placement
+# (repro.serving.placement) studies the paper's GPU/FPGA split on.
+# ---------------------------------------------------------------------------
+K40_ROOFLINE = dataclasses.replace(K40, name="nvidia-k40-roofline",
+                                   analytic=True)
+DE5_ROOFLINE = dataclasses.replace(DE5, name="altera-de5-roofline",
+                                   analytic=True)
+
+REGISTRY = {m.name: m for m in (TPU_V5E, K40, K40_CUBLAS, K40_CUDNN, DE5,
+                                K40_ROOFLINE, DE5_ROOFLINE)}
 
 
 def get(name: str) -> DeviceModel:

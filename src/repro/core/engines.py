@@ -24,9 +24,8 @@ import jax.numpy as jnp
 
 from ..kernels import ops, ref
 from . import device_models as dm
-from .layer_model import (AttentionSpec, ConvSpec, EmbeddingSpec, FCSpec,
-                          LayerSpec, MLPSpec, MoESpec, NormSpec, PoolSpec,
-                          SSMSpec)
+from .layer_model import (AttentionSpec, ConvSpec, FCSpec, LayerSpec,
+                          MLPSpec, MoESpec, NormSpec, PoolSpec, SSMSpec)
 
 LayerFn = Callable[..., jax.Array]
 
@@ -74,6 +73,15 @@ def _build_xla(spec: LayerSpec) -> LayerFn:
     if isinstance(spec, NormSpec) and spec.norm_type == "lrn":
         return lambda x, params: ref.lrn_ref(
             x, local_size=spec.local_size, alpha=spec.alpha, beta=spec.beta)
+    if isinstance(spec, AttentionSpec):
+        return functools.partial(_attention_apply, spec=spec)
+    if isinstance(spec, MLPSpec):
+        return functools.partial(_mlp_apply, gated=spec.gated)
+    if isinstance(spec, MoESpec):
+        return functools.partial(_moe_apply, top_k=spec.top_k,
+                                 gated=spec.gated)
+    if isinstance(spec, SSMSpec):
+        return functools.partial(_ssm_apply, spec=spec)
     raise NotImplementedError(f"xla builder: {type(spec).__name__}")
 
 
@@ -106,19 +114,200 @@ def _fc_apply(x, params, *, impl, activation):
 
 
 # ---------------------------------------------------------------------------
+# Decode-step builders (attention / mlp / moe / ssm).
+#
+# These run the serving phases' layer kinds as standalone callables so the
+# profiling harness can *measure* what admission and phase placement price
+# (ROADMAP: "profile the decode-step spec kinds").  Each mirrors the FLOP
+# structure its spec declares: attention scores q against a KV cache of
+# ``kv_len`` entries held in params; MoE routes each token to top_k experts;
+# SSM advances the recurrence over ``seq`` steps from a zero state.
+# ---------------------------------------------------------------------------
+def _attention_apply(x, params, *, spec):
+    # x: (B, S, D).  Cached K/V live in params (per-call lengths are part of
+    # the spec tuple) and are shared across the batch — the projection,
+    # score and output FLOPs match AttentionSpec.flops.
+    b, s, _ = x.shape
+    h, hk, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    q = jnp.einsum("bsd,dk->bsk", x, params["wq"])
+    k_new = jnp.einsum("bsd,dk->bsk", x, params["wk"])
+    v_new = jnp.einsum("bsd,dk->bsk", x, params["wv"])
+    if spec.qkv_bias:
+        q = q + params["bq"]
+        k_new = k_new + params["bk"]
+        v_new = v_new + params["bv"]
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k_new = k_new.reshape(b, s, hk, hd).transpose(0, 2, 1, 3)
+    v_new = v_new.reshape(b, s, hk, hd).transpose(0, 2, 1, 3)
+    kv = spec._eff_kv()
+    if kv > s:
+        # prepend the cached prefix so the freshly projected K/V stay live
+        # (the decode step both reads the cache and appends to it)
+        pre_k = jnp.broadcast_to(params["k_cache"][None, :, :kv - s],
+                                 (b, hk, kv - s, hd))
+        pre_v = jnp.broadcast_to(params["v_cache"][None, :, :kv - s],
+                                 (b, hk, kv - s, hd))
+        k = jnp.concatenate([pre_k, k_new], axis=2)
+        v = jnp.concatenate([pre_v, v_new], axis=2)
+    else:
+        k, v = k_new[:, :, :kv], v_new[:, :, :kv]
+    if h != hk:
+        k = jnp.repeat(k, h // hk, axis=1)
+        v = jnp.repeat(v, h // hk, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / (hd ** 0.5)
+    if spec.causal and s > 1:
+        mask = jnp.tril(jnp.ones((s, kv), bool), k=kv - s)
+        scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    out = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(scores, axis=-1), v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    return jnp.einsum("bsk,kd->bsd", out, params["wo"])
+
+
+def _mlp_apply(x, params, *, gated):
+    if gated:
+        hmid = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        hmid = jax.nn.gelu(x @ params["w_up"])
+    return hmid @ params["w_down"]
+
+
+def _moe_apply(x, params, *, top_k, gated):
+    b, s, d = x.shape
+    flat = x.reshape(b * s, d)
+    logits = flat @ params["w_router"]                    # (T, E)
+    weights, idx = jax.lax.top_k(jax.nn.softmax(logits, axis=-1), top_k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    up = params["w_up"][idx]                              # (T, k, d, f)
+    down = params["w_down"][idx]                          # (T, k, f, d)
+    if gated:
+        gate = params["w_gate"][idx]
+        hmid = jax.nn.silu(jnp.einsum("td,tkdf->tkf", flat, gate)) * \
+            jnp.einsum("td,tkdf->tkf", flat, up)
+    else:
+        hmid = jax.nn.gelu(jnp.einsum("td,tkdf->tkf", flat, up))
+    out = jnp.einsum("tkf,tkfd->tkd", hmid, down)
+    out = jnp.sum(out * weights[..., None], axis=1)
+    return out.reshape(b, s, d)
+
+
+def _ssm_apply(x, params, *, spec):
+    b, s, _ = x.shape
+    di = spec.d_inner
+    xz = x @ params["in_proj"]                            # (B, S, 2*di)
+    xs, z = xz[..., :di], xz[..., di:]
+    if spec.variant == "mamba1":
+        n = spec.d_state
+        # causal depthwise conv over the sequence
+        pad = jnp.pad(xs, ((0, 0), (spec.d_conv - 1, 0), (0, 0)))
+        conv = sum(pad[:, i:i + s] * params["conv_w"][:, i]
+                   for i in range(spec.d_conv))
+        u = jax.nn.silu(conv)
+        dbc = u @ params["x_proj"]                        # (B, S, dt+2n)
+        dt_rank = params["dt_proj"].shape[0]
+        dt = jax.nn.softplus(dbc[..., :dt_rank] @ params["dt_proj"])
+        bmat, cmat = dbc[..., dt_rank:dt_rank + n], dbc[..., dt_rank + n:]
+        a = -jnp.exp(params["a_log"])                     # (di, n)
+
+        def step(hstate, inputs):
+            u_t, dt_t, b_t, c_t = inputs
+            da = jnp.exp(dt_t[..., None] * a)             # (B, di, n)
+            hstate = da * hstate + (dt_t * u_t)[..., None] * b_t[:, None]
+            return hstate, jnp.einsum("bdn,bn->bd", hstate, c_t)
+
+        h0 = jnp.zeros((b, di, n), x.dtype)
+        xs_t = (u.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+                bmat.transpose(1, 0, 2), cmat.transpose(1, 0, 2))
+        _, ys = jax.lax.scan(step, h0, xs_t)
+        y = ys.transpose(1, 0, 2) + u * params["d_skip"]
+    else:                                                 # rglru
+        r = jax.nn.sigmoid(xs @ params["w_r"])
+        i = jax.nn.sigmoid(xs @ params["w_i"])
+        log_a = -8.0 * jax.nn.softplus(params["a_param"]) * r
+
+        def step(hstate, inputs):
+            x_t, la_t, i_t = inputs
+            a_t = jnp.exp(la_t)
+            hstate = a_t * hstate + jnp.sqrt(
+                jnp.maximum(1.0 - a_t * a_t, 0.0)) * (i_t * x_t)
+            return hstate, hstate
+
+        h0 = jnp.zeros((b, di), x.dtype)
+        xs_t = (xs.transpose(1, 0, 2), log_a.transpose(1, 0, 2),
+                i.transpose(1, 0, 2))
+        _, ys = jax.lax.scan(step, h0, xs_t)
+        y = ys.transpose(1, 0, 2)
+    return (y * jax.nn.silu(z)) @ params["out_proj"]
+
+
+# ---------------------------------------------------------------------------
 # Parameter init (specs are declarative; engines share one param layout)
 # ---------------------------------------------------------------------------
 def init_layer_params(spec: LayerSpec, key: jax.Array,
                       dtype=jnp.float32) -> Dict[str, jax.Array]:
+    def dense(k, shape, fan_in=None):
+        fan_in = fan_in or shape[0]
+        return jax.random.normal(k, shape, dtype) * (2.0 / fan_in) ** 0.5
+
     if isinstance(spec, ConvSpec):
         oc, ic, kh, kw = spec.m_k
-        fan_in = ic * kh * kw
-        w = jax.random.normal(key, (oc, ic, kh, kw), dtype) * (2.0 / fan_in) ** 0.5
+        w = dense(key, (oc, ic, kh, kw), fan_in=ic * kh * kw)
         return {"w": w, "b": jnp.zeros((oc,), dtype)}
     if isinstance(spec, FCSpec):
-        w = jax.random.normal(key, (spec.n_in, spec.k_o), dtype) * (
-            2.0 / spec.n_in) ** 0.5
-        return {"w": w, "b": jnp.zeros((spec.k_o,), dtype)}
+        return {"w": dense(key, (spec.n_in, spec.k_o)),
+                "b": jnp.zeros((spec.k_o,), dtype)}
+    if isinstance(spec, AttentionSpec):
+        ks = jax.random.split(key, 6)
+        d, h, hk, hd = (spec.d_model, spec.n_heads, spec.n_kv_heads,
+                        spec.head_dim)
+        p = {"wq": dense(ks[0], (d, h * hd)),
+             "wk": dense(ks[1], (d, hk * hd)),
+             "wv": dense(ks[2], (d, hk * hd)),
+             "wo": dense(ks[3], (h * hd, d)),
+             "k_cache": jax.random.normal(ks[4], (hk, spec._eff_kv(), hd),
+                                          dtype),
+             "v_cache": jax.random.normal(ks[5], (hk, spec._eff_kv(), hd),
+                                          dtype)}
+        if spec.qkv_bias:
+            p["bq"] = jnp.zeros((h * hd,), dtype)
+            p["bk"] = jnp.zeros((hk * hd,), dtype)
+            p["bv"] = jnp.zeros((hk * hd,), dtype)
+        return p
+    if isinstance(spec, MLPSpec):
+        ks = jax.random.split(key, 3)
+        d, f = spec.d_model, spec.d_ff
+        p = {"w_up": dense(ks[0], (d, f)), "w_down": dense(ks[1], (f, d))}
+        if spec.gated:
+            p["w_gate"] = dense(ks[2], (d, f))
+        return p
+    if isinstance(spec, MoESpec):
+        ks = jax.random.split(key, 4)
+        d, f, e = spec.d_model, spec.d_ff, spec.n_experts
+        p = {"w_router": dense(ks[0], (d, e)),
+             "w_up": dense(ks[1], (e, d, f), fan_in=d),
+             "w_down": dense(ks[2], (e, f, d), fan_in=f)}
+        if spec.gated:
+            p["w_gate"] = dense(ks[3], (e, d, f), fan_in=d)
+        return p
+    if isinstance(spec, SSMSpec):
+        ks = jax.random.split(key, 8)
+        d, di, n = spec.d_model, spec.d_inner, spec.d_state
+        p = {"in_proj": dense(ks[0], (d, 2 * di)),
+             "out_proj": dense(ks[1], (di, d))}
+        if spec.variant == "mamba1":
+            dt_rank = -(-d // 16)        # ceil(d / 16), matches SSMSpec.flops
+            p.update({
+                "conv_w": dense(ks[2], (di, spec.d_conv), fan_in=spec.d_conv),
+                "x_proj": dense(ks[3], (di, dt_rank + 2 * n)),
+                "dt_proj": dense(ks[4], (dt_rank, di)),
+                "a_log": jnp.log(jnp.broadcast_to(
+                    jnp.arange(1, n + 1, dtype=dtype), (di, n))),
+                "d_skip": jnp.ones((di,), dtype),
+            })
+        else:
+            p.update({"w_r": dense(ks[2], (di, di)),
+                      "w_i": dense(ks[3], (di, di)),
+                      "a_param": jnp.ones((di,), dtype)})
+        return p
     return {}
 
 
@@ -126,10 +315,10 @@ def init_layer_params(spec: LayerSpec, key: jax.Array,
 # Registry
 # ---------------------------------------------------------------------------
 _CNN_KINDS = ("conv", "fc", "pool", "norm")
+_LM_KINDS = ("attention", "mlp", "moe", "ssm", "embedding")
 
 XLA_ENGINE = ExecutionEngine(
-    name="xla", device=dm.TPU_V5E, kinds=_CNN_KINDS + (
-        "attention", "mlp", "moe", "ssm", "embedding"),
+    name="xla", device=dm.TPU_V5E, kinds=_CNN_KINDS + _LM_KINDS,
     builder=_build_xla, efficiency=0.55)
 PALLAS_ENGINE = ExecutionEngine(
     name="pallas", device=dm.TPU_V5E, kinds=_CNN_KINDS + ("attention",),
@@ -143,9 +332,23 @@ K40_CUBLAS_ENGINE = ExecutionEngine(
 K40_ENGINE = ExecutionEngine(name="k40", device=dm.K40, kinds=_CNN_KINDS)
 DE5_ENGINE = ExecutionEngine(name="de5-opencl", device=dm.DE5, kinds=_CNN_KINDS)
 
+# cost-only roofline variants of the paper boards covering the LM kinds —
+# the engine set phase placement (repro.serving.placement) prices the
+# prefill/decode split on (the paper's GPU/FPGA stage split, applied to the
+# two serving phases)
+K40_LM_ENGINE = ExecutionEngine(
+    name="k40-roofline", device=dm.K40_ROOFLINE, kinds=_CNN_KINDS + _LM_KINDS)
+DE5_LM_ENGINE = ExecutionEngine(
+    name="de5-roofline", device=dm.DE5_ROOFLINE, kinds=_CNN_KINDS + _LM_KINDS)
+
 DEFAULT_ENGINES = (XLA_ENGINE, PALLAS_ENGINE)
 PAPER_ENGINES = (K40_ENGINE, DE5_ENGINE)
+# the candidate set for per-phase serving placement; NOT part of ALL_ENGINES
+# so the paper-replay DSE benchmarks keep scheduling on the boards as
+# measured, not their idealized roofline twins
+PLACEMENT_ENGINES = (XLA_ENGINE, K40_LM_ENGINE, DE5_LM_ENGINE)
 ALL_ENGINES = DEFAULT_ENGINES + PAPER_ENGINES + (
     K40_CUDNN_ENGINE, K40_CUBLAS_ENGINE)
 
-ENGINES_BY_NAME = {e.name: e for e in ALL_ENGINES}
+ENGINES_BY_NAME = {e.name: e for e in ALL_ENGINES + (K40_LM_ENGINE,
+                                                     DE5_LM_ENGINE)}

@@ -73,6 +73,25 @@ class ExecutionPlan:
                 return a.engine
         raise KeyError(layer_name)
 
+    def offload_overhead(self, engines_by_name=None):
+        """Per-boundary engine-switch costs (the paper's PCIe sync, Fig. 5
+        step 4): wherever adjacent layers run on different engines, the
+        producer's output activation crosses at link bandwidth.  Returns
+        ``[(layer_a, layer_b, TransferCost), ...]`` for the switching
+        boundaries; total extra seconds = sum of ``t_transfer``."""
+        from .cost_model import transfer_cost
+        from .engines import ENGINES_BY_NAME
+        by_name = engines_by_name or ENGINES_BY_NAME
+        out = []
+        for a, b in zip(self.assignments, self.assignments[1:]):
+            if a.engine == b.engine:
+                continue
+            n_bytes = a.spec.activation_bytes(
+                self.batch, self.dtype_bytes) // 2   # producer's output half
+            out.append((a.spec.name, b.spec.name, transfer_cost(
+                n_bytes, by_name[a.engine].device, by_name[b.engine].device)))
+        return out
+
     def summary(self) -> str:
         rows = [f"{'layer':<8} {'kind':<6} {'engine':<12} "
                 f"{'time(ms)':>10} {'GFLOPS':>9} {'W':>7} {'mJ':>9}"]

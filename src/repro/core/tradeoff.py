@@ -17,7 +17,7 @@ from typing import Dict, List, Sequence
 
 from .cost_model import CostBreakdown, layer_cost
 from .device_models import DE5, K40, K40_CUBLAS, K40_CUDNN, DeviceModel
-from .layer_model import FCSpec, NetworkSpec, alexnet_spec
+from .layer_model import NetworkSpec, alexnet_spec
 
 # workload constant reproducing the paper's absolute GPU conv energy (see
 # module docstring); claims are checked on ratios, not on this constant.

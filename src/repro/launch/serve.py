@@ -7,6 +7,11 @@ static-batch server (``--static-batching``).
 Continuous path (repro.serving): an open-loop arrival stream feeds a
 slot-based KV pool; the batcher prices admission with core/cost_model.py and
 the jitted engine step interleaves prefill with the running decode batch.
+``--placement auto`` additionally runs the phase-placement DSE
+(repro.serving.placement): prefill and decode are priced separately over
+the engine set and the serving loop disaggregates onto the winning pair
+(explicit control: ``--placement disagg --prefill-engine X
+--decode-engine Y``).
 Static path: requests accumulate into a batch; prefill replays the prompt
 into a max_len cache; decode emits one token per step for the whole batch —
 the queue refills only between generations (head-of-line blocking).
@@ -28,7 +33,9 @@ import jax.numpy as jnp
 from ..configs import registry
 from ..models import sharding as shard_lib
 from ..models import transformer as T
-from ..serving import EngineLoop, synthetic_workload
+from ..serving import (DisaggregatedEngineLoop, EngineLoop, place_phases,
+                       synthetic_workload)
+from ..serving import placement as placement_lib
 from .mesh import make_host_mesh, make_production_mesh
 
 
@@ -101,7 +108,30 @@ def main() -> None:
     ap.add_argument("--calibrated-engine", default="xla",
                     help="engine whose measurements to calibrate from when "
                          "--calibrated-cache is given")
+    ap.add_argument("--placement", default="colocated",
+                    choices=["colocated", "disagg", "auto"],
+                    help="auto: price prefill/decode separately over the "
+                         "placement engine set (repro.serving.placement) "
+                         "and run the winning pair; disagg: force the "
+                         "disaggregated loop on --prefill-engine/"
+                         "--decode-engine")
+    ap.add_argument("--placement-objective", default="latency",
+                    choices=list(placement_lib.OBJECTIVES),
+                    help="objective the phase placement minimizes")
+    ap.add_argument("--prefill-engine", default=None, metavar="ENGINE",
+                    help="engine (core/engines name) whose device model "
+                         "prices the prefill phase (implies --placement "
+                         "disagg unless auto)")
+    ap.add_argument("--decode-engine", default=None, metavar="ENGINE",
+                    help="engine whose device model prices the decode phase")
+    ap.add_argument("--prefill-slots", type=int, default=None,
+                    help="disaggregated path: prefill-engine slots "
+                         "(default: --slots)")
     args = ap.parse_args()
+    if args.placement == "auto" and (args.prefill_engine
+                                     or args.decode_engine):
+        ap.error("--placement auto chooses the engines; drop "
+                 "--prefill-engine/--decode-engine or use --placement disagg")
 
     arch = registry.get(args.arch)
     cfg = arch.smoke if args.scale == "smoke" else arch.config
@@ -169,27 +199,98 @@ def main() -> None:
               f"({device_model.n_measurements} measurements, kinds "
               f"{sorted(device_model.throughput)}; other kinds fall back to "
               f"{device_model.base_efficiency:.2f} x peak)")
-    engine = EngineLoop(
-        cfg, params, n_slots=args.slots, max_seq=max_len,
-        device_name=args.device_model, device_model=device_model,
-        step_slo_s=None if args.step_slo_ms is None
-        else args.step_slo_ms / 1e3)
-    with mesh:
-        metrics = engine.run(requests)
-    print(f"[serve] token budget {engine.batcher.token_budget}/{args.slots} "
-          f"slots (device model {engine.batcher.device_name})")
+
+    # phase placement: which engine's device model prices each phase
+    from ..core.engines import ENGINES_BY_NAME
+
+    def _engine(name: str):
+        if name not in ENGINES_BY_NAME:
+            raise SystemExit(f"[serve] unknown engine {name!r} (choose from "
+                             f"{', '.join(sorted(ENGINES_BY_NAME))})")
+        return ENGINES_BY_NAME[name]
+
+    step_slo_s = None if args.step_slo_ms is None else args.step_slo_ms / 1e3
+    pre_eng = dec_eng = None
+    if args.placement == "auto":
+        decision = place_phases(
+            cfg, objective=args.placement_objective,
+            prompt_len=args.prompt_len, gen_len=args.gen_len,
+            batch=args.slots,
+            price="measured" if args.calibrated_cache else "analytic",
+            cache_path=args.calibrated_cache)
+        print(f"[serve] {decision.summary()}", flush=True)
+        pre_eng = ENGINES_BY_NAME[decision.prefill_engine]
+        dec_eng = ENGINES_BY_NAME[decision.decode_engine]
+    elif args.placement == "disagg" or args.prefill_engine or args.decode_engine:
+        pre_eng = _engine(args.prefill_engine or "xla")
+        dec_eng = _engine(args.decode_engine or "xla")
+        for eng, phase in ((pre_eng, "prefill"), (dec_eng, "decode")):
+            try:
+                c = placement_lib.phase_cost(
+                    cfg, eng, phase, prompt_len=args.prompt_len,
+                    gen_len=args.gen_len, batch=args.slots)
+            except ValueError as e:      # cost-only CNN engine, LM model
+                raise SystemExit(f"[serve] {e}")
+            print(f"[serve] {phase} on {eng.name}: modeled "
+                  f"{c.time_s*1e3:.3f}ms, {c.energy_j:.4f}J", flush=True)
+
+    def _phase_device(eng):
+        """Calibrated model when the cache covers this engine, else its own."""
+        if device_model is not None and eng.name == args.calibrated_engine:
+            return device_model
+        return eng.device
+
+    # auto placement only disaggregates when the analyzer says the split
+    # wins; an explicit --placement disagg always runs the two-engine loop
+    # (same-engine disagg measures the bare phase-boundary overhead)
+    if pre_eng is not None and (args.placement == "disagg"
+                                or pre_eng.name != dec_eng.name):
+        engine = DisaggregatedEngineLoop(
+            cfg, params, n_prefill_slots=args.prefill_slots or args.slots,
+            n_decode_slots=args.slots, max_seq=max_len,
+            prefill_device=_phase_device(pre_eng),
+            decode_device=_phase_device(dec_eng), step_slo_s=step_slo_s)
+        with mesh:
+            metrics = engine.run(requests)
+        for b in engine.batchers:
+            print(f"[serve] {b.phase} token budget {b.token_budget}/"
+                  f"{b.pool.n_slots} slots (device model {b.device_name})")
+        pools = (("prefill", engine.prefill.pool),
+                 ("decode", engine.decode.pool))
+        batchers = engine.batchers
+        for k, v in engine.handoff.stats().items():
+            val = f"{v:.4f}" if isinstance(v, float) else str(v)
+            print(f"[serve] handoff.{k:>17}: {val}", flush=True)
+    else:
+        if pre_eng is not None:          # colocated by choice of placement
+            device_model = _phase_device(pre_eng)
+        engine = EngineLoop(
+            cfg, params, n_slots=args.slots, max_seq=max_len,
+            device_name=args.device_model, device_model=device_model,
+            step_slo_s=step_slo_s)
+        with mesh:
+            metrics = engine.run(requests)
+        print(f"[serve] token budget {engine.batcher.token_budget}/"
+              f"{args.slots} slots (device model "
+              f"{engine.batcher.device_name})")
+        pools = (("", engine.pool),)
+        batchers = (engine.batcher,)
     for k, v in metrics.summary().items():
         val = f"{v:.4f}" if isinstance(v, float) else str(v)
         print(f"[serve] {k:>22}: {val}", flush=True)
     # KV-pool ledger + admission accounting (end-of-run state of the block
     # ledger, plus what the batcher did to the queue over the whole run)
-    for k, v in engine.pool.stats().items():
-        val = f"{v:.4f}" if isinstance(v, float) else str(v)
-        print(f"[serve] kv_pool.{k:>15}: {val}", flush=True)
-    b = engine.batcher
-    print(f"[serve] admission: {b.n_admitted} admitted, "
-          f"{b.n_rejected} rejected (deadline/oversize), "
-          f"{b.n_deferred} deferrals (budget or pool pressure)", flush=True)
+    for tag, pool in pools:
+        prefix = f"kv_pool{'.' + tag if tag else ''}"
+        for k, v in pool.stats().items():
+            val = f"{v:.4f}" if isinstance(v, float) else str(v)
+            print(f"[serve] {prefix}.{k:>15}: {val}", flush=True)
+    for b in batchers:
+        tag = f" [{b.phase}]" if len(batchers) > 1 else ""
+        print(f"[serve] admission{tag}: {b.n_admitted} admitted, "
+              f"{b.n_rejected} rejected (deadline/oversize), "
+              f"{b.n_deferred} deferrals (budget or pool pressure)",
+              flush=True)
 
 
 if __name__ == "__main__":

@@ -10,7 +10,7 @@ abstract_args) so callers can jit/lower uniformly:
 from __future__ import annotations
 
 import functools
-from typing import Any, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp

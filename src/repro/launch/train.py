@@ -27,7 +27,6 @@ import functools
 import time
 
 import jax
-import jax.numpy as jnp
 
 from ..checkpoint import CheckpointManager
 from ..configs import registry

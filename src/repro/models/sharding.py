@@ -25,7 +25,6 @@ import dataclasses
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .transformer import ModelConfig

@@ -14,7 +14,6 @@ with zero collectives inside the scan.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Dict, Optional, Tuple
 

@@ -25,8 +25,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.engines import ExecutionEngine, init_layer_params
-from ..core.layer_model import (ConvSpec, FCSpec, LayerSpec, NetworkSpec,
-                                NormSpec, PoolSpec)
+from ..core.layer_model import (AttentionSpec, ConvSpec, FCSpec, LayerSpec,
+                                MLPSpec, MoESpec, NetworkSpec, NormSpec,
+                                PoolSpec, SSMSpec)
 from . import cache as cache_lib
 
 
@@ -70,6 +71,10 @@ def make_input(spec: LayerSpec, batch: int = 1,
         shape = (batch, h, w, c)
     elif isinstance(spec, FCSpec):
         shape = (batch,) + tuple(spec.m_i)
+    elif isinstance(spec, (AttentionSpec, MLPSpec, MoESpec, SSMSpec)):
+        # the decode-step / prefill kinds serving admission prices: a
+        # (batch, seq, d_model) activation (seq=1 for decode-step specs)
+        shape = (batch, spec.seq, spec.d_model)
     else:
         raise NotImplementedError(
             f"no input synthesizer for {type(spec).__name__}")

@@ -201,18 +201,44 @@ def _main() -> None:
     ap = argparse.ArgumentParser(
         description="profile-cache maintenance (schema validation)")
     ap.add_argument("--validate", metavar="PATH", required=True,
-                    help="check PATH against the cache JSON schema")
+                    help="check PATH against the cache JSON schema and "
+                         "require usable entries for this environment")
+    ap.add_argument("--allow-empty", action="store_true",
+                    help="accept a schema-valid cache with no entries "
+                         "usable under the current jax version / backend")
     args = ap.parse_args()
+    if not os.path.exists(args.validate):
+        raise SystemExit(f"[cache] INVALID: {args.validate}: no such file "
+                         f"(run `python -m repro.launch.profile` first)")
     with open(args.validate) as f:
-        data = json.load(f)
+        try:
+            data = json.load(f)
+        except json.JSONDecodeError as e:
+            raise SystemExit(f"[cache] INVALID: {args.validate}: "
+                             f"not JSON ({e})")
     errors = validate_dict(data)
     if errors:
         for e in errors:
             print(f"[cache] INVALID: {e}")
         raise SystemExit(1)
+    # a schema-valid cache that no lookup can use is a failure too: the
+    # consumers (serve --calibrated-cache, measured placement) only see
+    # entries matching the running jax version / backend, so validating a
+    # cache this environment cannot read must not report success
     n = len(data["entries"])
+    env = environment()
+    usable = sum(1 for m in data["entries"].values()
+                 if m["jax_version"] == env["jax_version"]
+                 and m["backend"] == env["backend"])
+    if usable == 0 and not args.allow_empty:
+        raise SystemExit(
+            f"[cache] INVALID: {args.validate}: schema OK but no usable "
+            f"entries for jax {env['jax_version']} / {env['backend']} "
+            f"({n} total; measured-pricing lookups would find nothing — "
+            f"re-profile here, or pass --allow-empty to accept)")
     print(f"[cache] {args.validate}: schema v{data['schema']} OK, "
-          f"{n} entr{'y' if n == 1 else 'ies'}")
+          f"{n} entr{'y' if n == 1 else 'ies'} ({usable} usable in this "
+          f"environment)")
 
 
 if __name__ == "__main__":

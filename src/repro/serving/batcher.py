@@ -15,7 +15,7 @@ steal pool blocks from live traffic).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Optional
 
 from ..core import device_models
 from ..core.cost_model import layer_cost
@@ -26,39 +26,49 @@ from .kv_pool import KVPool
 from .request import Request, RequestState
 
 
-def decode_network_spec(cfg: ModelConfig, kv_len: int) -> NetworkSpec:
-    """Declarative per-token decode-step spec for `cfg` (CNNLab layer
-    tuples) — what the cost model prices admission against."""
+def phase_network_spec(cfg: ModelConfig, *, seq: int,
+                       kv_len: int) -> NetworkSpec:
+    """Declarative layer-tuple spec for one serving-phase call of `cfg`:
+    ``seq`` tokens attending over ``kv_len`` cached positions.  ``seq=1``
+    is a decode step; ``seq=prompt_len, kv_len=prompt_len`` is prefill —
+    the two workloads phase placement prices against each other."""
     layers = []
     for i, btype in enumerate(cfg.layer_types()):
         if btype in ("attn", "xattn"):
             layers.append(AttentionSpec(
                 f"L{i}.attn", d_model=cfg.d_model, n_heads=cfg.n_heads,
-                n_kv_heads=cfg.n_kv_heads, seq=1, kv_len=kv_len,
+                n_kv_heads=cfg.n_kv_heads, seq=seq, kv_len=kv_len,
                 causal=True, window=cfg.attn_window, qkv_bias=cfg.qkv_bias,
                 cross=btype == "xattn"))
         elif btype == "rec":
             layers.append(SSMSpec(f"L{i}.rglru", d_model=cfg.d_model,
                                   d_state=cfg.ssm_state, d_conv=cfg.ssm_conv,
-                                  expand=cfg.ssm_expand, seq=1,
+                                  expand=cfg.ssm_expand, seq=seq,
                                   variant="rglru"))
         elif btype == "mamba":
             layers.append(SSMSpec(f"L{i}.mamba", d_model=cfg.d_model,
                                   d_state=cfg.ssm_state, d_conv=cfg.ssm_conv,
-                                  expand=cfg.ssm_expand, seq=1,
+                                  expand=cfg.ssm_expand, seq=seq,
                                   variant="mamba1"))
         if btype != "mamba":            # mamba blocks have no separate MLP
             if cfg.n_experts > 0:
                 layers.append(MoESpec(f"L{i}.moe", d_model=cfg.d_model,
-                                      d_ff=cfg.d_ff, seq=1,
+                                      d_ff=cfg.d_ff, seq=seq,
                                       n_experts=cfg.n_experts,
                                       top_k=cfg.moe_top_k,
                                       gated=cfg.gated_mlp))
             else:
                 layers.append(MLPSpec(f"L{i}.mlp", d_model=cfg.d_model,
-                                      d_ff=cfg.d_ff, seq=1,
+                                      d_ff=cfg.d_ff, seq=seq,
                                       gated=cfg.gated_mlp))
-    return NetworkSpec(f"{cfg.name}-decode-step", tuple(layers))
+    tag = "decode-step" if seq == 1 else f"prefill{seq}"
+    return NetworkSpec(f"{cfg.name}-{tag}", tuple(layers))
+
+
+def decode_network_spec(cfg: ModelConfig, kv_len: int) -> NetworkSpec:
+    """Per-token decode-step spec — what admission prices (one engine
+    iteration carries one token per active slot)."""
+    return phase_network_spec(cfg, seq=1, kv_len=kv_len)
 
 
 def step_time_model(cfg: ModelConfig, kv_len: int, n_tokens: int,
@@ -101,15 +111,22 @@ class AdmissionDecision:
 
 
 class ContinuousBatcher:
-    """Admits QUEUED requests into pool slots against the token budget."""
+    """Admits QUEUED requests into pool slots against the token budget.
+
+    One batcher governs one (phase, engine) pair: its token budget is
+    priced on *its* device model, so a disaggregated deployment runs two —
+    a prefill batcher budgeted on the prefill engine and a decode batcher
+    budgeted on the decode engine (``phase`` labels which this is)."""
 
     def __init__(self, cfg: ModelConfig, pool: KVPool, *,
                  device_name: str = "tpu-v5e",
                  device_model: Optional[device_models.DeviceModel] = None,
                  step_slo_s: Optional[float] = None,
-                 token_budget: Optional[int] = None):
+                 token_budget: Optional[int] = None,
+                 phase: str = "decode"):
         self.cfg = cfg
         self.pool = pool
+        self.phase = phase
         self.device_name = (device_model.name if device_model is not None
                             else device_name)
         self.device_model = device_model

@@ -1,0 +1,261 @@
+"""Phase-disaggregated serving: prefill and decode on separate engines.
+
+CNNLab offloads each network stage to the accelerator where its trade-off
+wins (§III.A/IV); serving has exactly two stages — compute-bound prefill
+and memory-bound decode — so the same split applies: a *prefill engine*
+ingests prompts, and at the phase boundary each request's per-slot state
+(KV rows, recurrent states, feed position, first sampled token) is
+exported and imported into a *decode engine* that carries the generation.
+The hand-off is the paper's offload overhead (PCIe sync, Fig. 5 step 4)
+applied to the phase boundary: the loop meters the actual bytes it moves
+and prices them with ``core.cost_model.transfer_cost`` on the two phases'
+device models — the same model ``serving.placement`` uses to decide
+whether the split is worth it at all.
+
+Each phase owns its own KV pool and its own :class:`ContinuousBatcher`,
+so admission and migration are budgeted per (phase, engine) pair: queued
+requests enter prefill against the prefill engine's token budget; prefill-
+complete requests migrate only when the decode engine's budget and pool
+admit them (until then they hold their prefill slot — natural back-
+pressure on admission).
+
+Per-request outputs are bit-identical to the colocated
+:class:`~repro.serving.engine_loop.EngineLoop` (and therefore to the
+static server): the migrated snapshot is exact, and the per-slot step math
+is engine-independent.  ``tests/test_placement.py`` asserts it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from ..core import device_models
+from ..core.cost_model import transfer_cost
+from ..models import transformer as T
+from .batcher import ContinuousBatcher
+from .engine_loop import ServeMetrics, SlotEngine
+from .kv_pool import KVPool
+from .request import Request, RequestState
+
+
+@dataclasses.dataclass
+class HandoffLedger:
+    """What the phase boundary actually moved, plus its modeled price."""
+
+    n_handoffs: int = 0
+    bytes_moved: int = 0
+    modeled_s: float = 0.0
+    modeled_energy_j: float = 0.0
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "n_handoffs": self.n_handoffs,
+            "bytes_moved": self.bytes_moved,
+            "modeled_s": self.modeled_s,
+            "modeled_energy_j": self.modeled_energy_j,
+        }
+
+
+class DisaggregatedEngineLoop:
+    """Two SlotEngines (prefill + decode) with explicit slot migration."""
+
+    BURST_CAP_PENDING = 4
+
+    def __init__(self, cfg: T.ModelConfig, params, *, n_prefill_slots: int,
+                 n_decode_slots: int, max_seq: int, block_size: int = 16,
+                 prefill_device_name: str = "tpu-v5e",
+                 decode_device_name: str = "tpu-v5e",
+                 prefill_device: Optional[device_models.DeviceModel] = None,
+                 decode_device: Optional[device_models.DeviceModel] = None,
+                 step_slo_s: Optional[float] = None,
+                 handoff_link_bw: Optional[float] = None):
+        self.cfg = cfg
+        prefill_pool = KVPool(n_prefill_slots, max_seq, block_size=block_size)
+        decode_pool = KVPool(n_decode_slots, max_seq, block_size=block_size)
+        self.prefill = SlotEngine(cfg, params, prefill_pool)
+        self.decode = SlotEngine(cfg, params, decode_pool)
+        self.prefill_batcher = ContinuousBatcher(
+            cfg, prefill_pool, phase="prefill",
+            device_name=prefill_device_name, device_model=prefill_device,
+            step_slo_s=step_slo_s)
+        self.decode_batcher = ContinuousBatcher(
+            cfg, decode_pool, phase="decode",
+            device_name=decode_device_name, device_model=decode_device,
+            step_slo_s=step_slo_s)
+        self._prefill_dev = (prefill_device
+                             or device_models.get(prefill_device_name))
+        self._decode_dev = (decode_device
+                            or device_models.get(decode_device_name))
+        self._handoff_link_bw = handoff_link_bw
+        self.handoff = HandoffLedger()
+
+    def warmup(self) -> None:
+        self.prefill.warmup()
+        self.decode.warmup()
+
+    @property
+    def batchers(self):
+        return (self.prefill_batcher, self.decode_batcher)
+
+    # ---- migration -------------------------------------------------------
+    def _migrate(self, req: Request, prefill_active: np.ndarray,
+                 decode_active: np.ndarray) -> bool:
+        """Move a prefill-complete request onto the decode engine.  Returns
+        False (leaving the request parked in its prefill slot) when the
+        decode engine's token budget or pool cannot take it yet."""
+        if self.decode.n_active >= self.decode_batcher.token_budget:
+            return False
+        if not self.decode.pool.can_admit(req.total_tokens):
+            return False
+        state = self.prefill.export_slot(req.slot)
+        written = self.prefill.pool.lease(req.rid).written_tokens
+        prefill_active[req.slot] = False
+        self.prefill.release(req)
+        req.slot = self.decode.pool.alloc(req.rid, req.total_tokens)
+        self.decode.import_slot(req.slot, state)
+        self.decode.slots[req.slot] = req
+        self.decode.steps_done[req.slot] = 0
+        # the prefill engine already produced the first sample; the decode
+        # engine owes the remaining gen - 1 steps
+        self.decode.steps_total[req.slot] = req.max_new_tokens - 1
+        # carry the KV-write accounting into the decode pool's ledger
+        self.decode.pool.note_write(req.rid, min(written, req.total_tokens))
+        decode_active[req.slot] = True
+        req.state = RequestState.DECODE
+        self.decode_batcher.n_admitted += 1      # migration ledger
+
+        n_bytes = SlotEngine.state_nbytes(state)
+        price = transfer_cost(n_bytes, self._prefill_dev, self._decode_dev,
+                              link_bw=self._handoff_link_bw)
+        self.handoff.n_handoffs += 1
+        self.handoff.bytes_moved += n_bytes
+        self.handoff.modeled_s += price.t_transfer
+        self.handoff.modeled_energy_j += price.energy_j
+        return True
+
+    # ---- main loop -------------------------------------------------------
+    def run(self, requests: List[Request], *,
+            now_fn: Callable[[], float] = time.perf_counter,
+            max_steps: Optional[int] = None) -> ServeMetrics:
+        metrics = ServeMetrics()
+        pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        queue: List[Request] = []
+        ready: List[Request] = []        # prefill done, awaiting migration
+        pre_active = np.zeros((self.prefill.pool.n_slots,), bool)
+        dec_active = np.zeros((self.decode.pool.n_slots,), bool)
+        t0 = now_fn()
+        skew = 0.0
+        clock = lambda: now_fn() - t0 + skew
+
+        def busy() -> bool:
+            return bool(queue or ready or self.prefill.n_active
+                        or self.decode.n_active)
+
+        while pending or busy():
+            now = clock()
+            while pending and pending[0].arrival <= now:
+                queue.append(pending.pop(0))
+            if not busy():
+                skew += pending[0].arrival - now
+                continue
+
+            # requests that can never fit the DECODE pool would park in a
+            # prefill slot forever: shed them before admission
+            i = 0
+            while i < len(queue):
+                r = queue[i]
+                if (r.total_tokens > self.decode.pool.max_seq
+                        or self.decode.pool.blocks_needed(r.total_tokens)
+                        > self.decode.pool.total_blocks):
+                    r.state = RequestState.DROPPED
+                    metrics.n_dropped += 1
+                    queue.pop(i)
+                    continue
+                i += 1
+
+            # migrate phase-boundary requests (decode budget + pool gated)
+            ready = [req for req in ready
+                     if not self._migrate(req, pre_active, dec_active)]
+
+            # admit new arrivals into the prefill engine; ready requests
+            # still hold prefill slots, so n_active covers them
+            decision = self.prefill_batcher.admit(
+                queue, self.prefill.n_active, now)
+            metrics.n_dropped += len(decision.dropped)
+            for req in decision.admitted:
+                # the first sample lands after plen steps; the rest of the
+                # generation belongs to the decode engine
+                self.prefill.bind(req, steps_total=req.prompt_len)
+                pre_active[req.slot] = True
+
+            if not self.prefill.n_active and not self.decode.n_active:
+                continue                 # nothing runnable (pool pressure)
+
+            # one burst per engine; both stay short while hand-offs or
+            # arrivals are waiting so migration latency is bounded
+            throttle = bool(pending or queue or ready)
+            pre_burstable = pre_active & (self.prefill.steps_done
+                                          < self.prefill.steps_total)
+            if pre_burstable.any():
+                remaining = (self.prefill.steps_total
+                             - self.prefill.steps_done)[pre_burstable]
+                burst = int(remaining.min())
+                if throttle:
+                    burst = min(burst, self.BURST_CAP_PENDING)
+                if max_steps is not None:
+                    burst = min(burst, max(max_steps - metrics.n_steps, 0))
+                if burst:
+                    self.prefill.dispatch(burst, pre_burstable)
+                    metrics.n_steps += burst
+            dec_burstable = dec_active & (self.decode.steps_done
+                                          < self.decode.steps_total)
+            if dec_burstable.any():
+                remaining = (self.decode.steps_total
+                             - self.decode.steps_done)[dec_burstable]
+                burst = int(remaining.min())
+                if throttle:
+                    burst = min(burst, self.BURST_CAP_PENDING)
+                if max_steps is not None:
+                    burst = min(burst, max(max_steps - metrics.n_steps, 0))
+                if burst:
+                    self.decode.dispatch(burst, dec_burstable)
+                    metrics.n_steps += burst
+            metrics.occupancy.append(
+                (self.prefill.pool.occupancy()
+                 + self.decode.pool.occupancy()) / 2)
+            metrics.utilization.append(
+                (self.prefill.pool.utilization()
+                 + self.decode.pool.utilization()) / 2)
+
+            now = clock()
+            # prefill completions -> phase boundary
+            ready_rids = {r.rid for r in ready}
+            for s, req in enumerate(self.prefill.slots):
+                if req is None or req.rid in ready_rids:
+                    continue
+                req.n_fed = int(self.prefill.steps_done[s])
+                if self.prefill.steps_done[s] >= self.prefill.steps_total[s]:
+                    # first sample landed inside this burst
+                    req.state = RequestState.DECODE
+                    req.t_first_token = now
+                    ready.append(req)
+            # decode completions
+            for s, req in enumerate(self.decode.slots):
+                if req is None:
+                    continue
+                req.n_fed = req.prompt_len + int(self.decode.steps_done[s])
+                if self.decode.steps_done[s] >= self.decode.steps_total[s]:
+                    row = self.decode.pull_output(s)
+                    req.output = row[:req.max_new_tokens].tolist()
+                    req.state = RequestState.DONE
+                    req.t_done = clock()
+                    self.decode.release(req)
+                    dec_active[s] = False
+                    metrics.observe(req)
+            if max_steps is not None and metrics.n_steps >= max_steps:
+                break
+        metrics.elapsed_s = clock()
+        return metrics

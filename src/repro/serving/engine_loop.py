@@ -16,6 +16,13 @@ dispatches a *burst* of steps up to the next completion boundary and only
 then pulls the finished slots' output rows.  This keeps per-step overhead
 at dispatch cost, matching the static server's async decode chain.
 
+The slot state + burst machinery lives in :class:`SlotEngine` so one
+deployment can run several engines: :class:`EngineLoop` composes a single
+SlotEngine (colocated serving), while
+:class:`~repro.serving.disagg.DisaggregatedEngineLoop` composes two — a
+prefill engine and a decode engine — and migrates slots between them
+(`export_slot`/`import_slot`) at the phase boundary.
+
 The loop is driven by a clock function so tests can run it reproducibly;
 the CLI and benchmark use wall time, which is what the open-loop arrival
 process (request.synthetic_workload) is offered against.
@@ -115,44 +122,37 @@ def _fused_step(params, cfg, cache, prompts, plens, last_tok, out_buf,
     return cache, last_tok, out_buf
 
 
-class EngineLoop:
-    """Owns the slot cache, the jitted fused step, the pool, the batcher."""
+class SlotEngine:
+    """Device-resident slot state + jitted burst machinery for one engine.
 
-    # with arrivals pending, bursts stay short so admission latency is
-    # bounded; otherwise a burst runs to the next completion boundary
-    BURST_CAP_PENDING = 4
+    Owns the slot cache, the prompt/output buffers, the per-slot step
+    schedule and the compiled burst buckets.  The per-slot math is exactly
+    `decode_step`'s, so outputs are bit-identical whether a request lives
+    its whole life in one SlotEngine (colocated) or is exported from a
+    prefill engine and imported into a decode engine mid-flight.
+    """
 
-    def __init__(self, cfg: T.ModelConfig, params, *, n_slots: int,
-                 max_seq: int, block_size: int = 16,
-                 total_blocks: Optional[int] = None,
-                 device_name: str = "tpu-v5e",
-                 device_model=None,
-                 step_slo_s: Optional[float] = None,
-                 token_budget: Optional[int] = None):
+    # largest scanned burst compiled; bounds compile count (power-of-two
+    # buckets 1..MAX_BUCKET)
+    MAX_BUCKET = 32
+
+    def __init__(self, cfg: T.ModelConfig, params, pool: KVPool):
         self.cfg = cfg
         self.params = params
-        self.pool = KVPool(n_slots, max_seq, block_size=block_size,
-                           total_blocks=total_blocks)
-        self.batcher = ContinuousBatcher(
-            cfg, self.pool, device_name=device_name,
-            device_model=device_model, step_slo_s=step_slo_s,
-            token_budget=token_budget)
-        self.cache = T.init_slot_cache(cfg, n_slots, max_seq)
-        self.max_prompt = max_seq
-        self.max_gen = max_seq
+        self.pool = pool
+        n_slots = pool.n_slots
+        self.cache = T.init_slot_cache(cfg, n_slots, pool.max_seq)
+        self.max_prompt = pool.max_seq
+        self.max_gen = pool.max_seq
         self._prompts = jnp.zeros((n_slots, self.max_prompt), jnp.int32)
         self._plens = jnp.zeros((n_slots,), jnp.int32)
         self._last_tok = jnp.zeros((n_slots,), jnp.int32)
         self._out_buf = jnp.zeros((n_slots, self.max_gen), jnp.int32)
         self._burst_fns: Dict[int, Callable] = {}
-        self._slots: List[Optional[Request]] = [None] * n_slots
+        self.slots: List[Optional[Request]] = [None] * n_slots
         # host-side schedule state: active steps done / total per slot
-        self._steps_done = np.zeros((n_slots,), np.int64)
-        self._steps_total = np.zeros((n_slots,), np.int64)
-
-    # largest scanned burst compiled; bounds compile count (power-of-two
-    # buckets 1..MAX_BUCKET)
-    MAX_BUCKET = 32
+        self.steps_done = np.zeros((n_slots,), np.int64)
+        self.steps_total = np.zeros((n_slots,), np.int64)
 
     def _burst_fn(self, k: int) -> Callable:
         """Jitted scan of k fused steps — one dispatch per bucket instead of
@@ -186,29 +186,133 @@ class EngineLoop:
 
     @property
     def n_active(self) -> int:
-        return sum(r is not None for r in self._slots)
+        return sum(r is not None for r in self.slots)
 
-    def _bind_slot(self, req: Request) -> None:
+    def active_requests(self):
+        return (r for r in self.slots if r is not None)
+
+    def bind(self, req: Request, *, steps_total: int) -> None:
         """Upload the request's prompt into its slot and reset per-request
         state (position counter + recurrent SSM states; attention KV rows
-        need no clearing — per-slot position masks hide stale entries)."""
+        need no clearing — per-slot position masks hide stale entries).
+        ``steps_total`` is the number of engine steps this request runs on
+        THIS engine (plen + gen - 1 colocated; plen for a prefill phase)."""
         s = req.slot
         row = np.zeros((self.max_prompt,), np.int32)
         row[:req.prompt_len] = req.prompt
         self._prompts = self._prompts.at[s].set(jnp.asarray(row))
         self._plens = self._plens.at[s].set(req.prompt_len)
         self.cache = T.reset_slot_state(self.cfg, self.cache, s)
-        self._slots[s] = req
-        self._steps_done[s] = 0
-        # greedy decoding with known lengths: completion is deterministic —
-        # the final sample lands after plen + gen - 1 active steps
-        self._steps_total[s] = req.prompt_len + req.max_new_tokens - 1
+        self.slots[s] = req
+        self.steps_done[s] = 0
+        self.steps_total[s] = steps_total
+
+    def dispatch(self, burst: int, active_np: np.ndarray) -> None:
+        """Dispatch `burst` fused steps over the active slots (bucketed
+        power-of-two scans, no host sync)."""
+        active_dev = jnp.asarray(active_np)
+        k = burst
+        while k > 0:
+            b = min(self.MAX_BUCKET, 1 << (k.bit_length() - 1))
+            (self.cache, self._last_tok, self._out_buf) = self._burst_fn(b)(
+                self.params, self.cache, self._prompts, self._plens,
+                self._last_tok, self._out_buf, active_dev)
+            k -= b
+        self.steps_done[active_np] += burst
+        for s, req in enumerate(self.slots):
+            if req is not None and active_np[s]:
+                self.pool.note_write(req.rid, burst)
+
+    def pull_output(self, slot: int) -> np.ndarray:
+        """Sync and read one slot's sampled-token row."""
+        return np.asarray(self._out_buf[slot])
+
+    def release(self, req: Request) -> None:
+        """Free the request's slot + pool lease on this engine."""
+        self.pool.free(req.rid)
+        self.slots[req.slot] = None
+
+    # ---- slot hand-off (phase disaggregation) ----------------------------
+    def export_slot(self, s: int) -> Dict:
+        """Snapshot every per-slot tensor a request needs to resume on
+        another engine: KV rows / recurrent states / position, the prompt
+        row + feed state, and the sampled-output row.  This is the payload
+        the placement analyzer prices with the offload-overhead model."""
+        blocks, rem = self.cache["layers"]
+        take_b = lambda a: a[:, s] if getattr(a, "ndim", 0) >= 2 else a
+        take_r = lambda a: a[s] if getattr(a, "ndim", 0) >= 1 else a
+        return {
+            "blocks": jax.tree.map(take_b, blocks),
+            "rem": jax.tree.map(take_r, rem),
+            "pos": self.cache["pos"][s],
+            "prompt": self._prompts[s],
+            "plen": self._plens[s],
+            "last_tok": self._last_tok[s],
+            "out_row": self._out_buf[s],
+        }
+
+    def import_slot(self, s: int, state: Dict) -> None:
+        """Install an exported slot snapshot into slot ``s`` (bit-exact:
+        the imported request decodes the same tokens it would have
+        produced had it stayed on the exporting engine)."""
+        blocks, rem = self.cache["layers"]
+        set_b = lambda a, v: (a.at[:, s].set(v)
+                              if getattr(a, "ndim", 0) >= 2 else a)
+        set_r = lambda a, v: (a.at[s].set(v)
+                              if getattr(a, "ndim", 0) >= 1 else a)
+        self.cache = {
+            "layers": (jax.tree.map(set_b, blocks, state["blocks"]),
+                       jax.tree.map(set_r, rem, state["rem"])),
+            "pos": self.cache["pos"].at[s].set(state["pos"]),
+            "cross": self.cache.get("cross"),
+        }
+        self._prompts = self._prompts.at[s].set(state["prompt"])
+        self._plens = self._plens.at[s].set(state["plen"])
+        self._last_tok = self._last_tok.at[s].set(state["last_tok"])
+        self._out_buf = self._out_buf.at[s].set(state["out_row"])
+
+    @staticmethod
+    def state_nbytes(state: Dict) -> int:
+        """Byte size of an exported slot snapshot (the hand-off payload)."""
+        return sum(int(leaf.nbytes) for leaf in jax.tree.leaves(state))
+
+
+class EngineLoop:
+    """Colocated serving: one SlotEngine runs both phases of every request."""
+
+    # with arrivals pending, bursts stay short so admission latency is
+    # bounded; otherwise a burst runs to the next completion boundary
+    BURST_CAP_PENDING = 4
+
+    def __init__(self, cfg: T.ModelConfig, params, *, n_slots: int,
+                 max_seq: int, block_size: int = 16,
+                 total_blocks: Optional[int] = None,
+                 device_name: str = "tpu-v5e",
+                 device_model=None,
+                 step_slo_s: Optional[float] = None,
+                 token_budget: Optional[int] = None):
+        self.cfg = cfg
+        self.pool = KVPool(n_slots, max_seq, block_size=block_size,
+                           total_blocks=total_blocks)
+        self.batcher = ContinuousBatcher(
+            cfg, self.pool, device_name=device_name,
+            device_model=device_model, step_slo_s=step_slo_s,
+            token_budget=token_budget)
+        self.engine = SlotEngine(cfg, params, self.pool)
+
+    def warmup(self) -> None:
+        self.engine.warmup()
+
+    @property
+    def n_active(self) -> int:
+        return self.engine.n_active
 
     def run(self, requests: List[Request], *,
             now_fn: Callable[[], float] = time.perf_counter,
             max_steps: Optional[int] = None) -> ServeMetrics:
         """Serve `requests` (an arrival-stamped open-loop stream) to
         completion.  Returns the aggregate metrics."""
+        eng = self.engine
         metrics = ServeMetrics()
         pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
         queue: List[Request] = []
@@ -217,70 +321,63 @@ class EngineLoop:
         skew = 0.0                       # idle fast-forward (see below)
         clock = lambda: now_fn() - t0 + skew
 
-        while pending or queue or self.n_active:
+        while pending or queue or eng.n_active:
             now = clock()
             # open-loop arrivals: everything whose arrival time has passed
             # joins the queue
             while pending and pending[0].arrival <= now:
                 queue.append(pending.pop(0))
-            if not queue and not self.n_active:
+            if not queue and not eng.n_active:
                 # fully idle with the next arrival in the future: fast-
                 # forward the clock to it instead of busy-waiting, so
                 # timestamps stay on the offered-load timeline (TTFT and
                 # latency remain >= 0)
                 skew += pending[0].arrival - now
                 continue
-            decision = self.batcher.admit(queue, self.n_active, now)
+            decision = self.batcher.admit(queue, eng.n_active, now)
             metrics.n_dropped += len(decision.dropped)
             for req in decision.admitted:
-                self._bind_slot(req)
+                # greedy decoding with known lengths: completion is
+                # deterministic — the final sample lands after
+                # plen + gen - 1 active steps
+                eng.bind(req, steps_total=(req.prompt_len
+                                           + req.max_new_tokens - 1))
                 active_np[req.slot] = True
 
-            if self.n_active == 0:
+            if eng.n_active == 0:
                 continue                 # nothing admissible (pool pressure)
 
             # burst: dispatch steps to the next completion boundary without
             # any host sync; the device chain pipelines behind dispatch
-            remaining = self._steps_total - self._steps_done
+            remaining = eng.steps_total - eng.steps_done
             burst = int(remaining[active_np].min())
             if pending:
                 burst = min(burst, self.BURST_CAP_PENDING)
             if max_steps is not None:
                 burst = min(burst, max_steps - metrics.n_steps)
-            active_dev = jnp.asarray(active_np)
-            k = burst
-            while k > 0:
-                b = min(self.MAX_BUCKET, 1 << (k.bit_length() - 1))
-                (self.cache, self._last_tok, self._out_buf) = self._burst_fn(
-                    b)(self.params, self.cache, self._prompts, self._plens,
-                       self._last_tok, self._out_buf, active_dev)
-                k -= b
-            self._steps_done[active_np] += burst
+            eng.dispatch(burst, active_np)
             metrics.n_steps += burst
-            for req in (r for r in self._slots if r is not None):
-                self.pool.note_write(req.rid, burst)
             metrics.occupancy.append(self.pool.occupancy())
             metrics.utilization.append(self.pool.utilization())
 
             now = clock()
-            for s, req in enumerate(self._slots):
+            for s, req in enumerate(eng.slots):
                 if req is None:
                     continue
-                req.n_fed = int(self._steps_done[s])
+                req.n_fed = int(eng.steps_done[s])
                 if (req.state is RequestState.PREFILL
                         and req.n_fed >= req.prompt_len):
                     # first sample landed inside this burst (dispatch-time
                     # stamp; completion below syncs the chain)
                     req.state = RequestState.DECODE
                     req.t_first_token = now
-                if self._steps_done[s] >= self._steps_total[s]:
+                if eng.steps_done[s] >= eng.steps_total[s]:
                     # completion boundary: sync and pull this slot's tokens
-                    row = np.asarray(self._out_buf[s])
+                    row = eng.pull_output(s)
                     req.output = row[:req.max_new_tokens].tolist()
                     req.state = RequestState.DONE
                     req.t_done = clock()
-                    self.pool.free(req.rid)
-                    self._slots[s] = None
+                    eng.release(req)
                     active_np[s] = False
                     metrics.observe(req)
             if max_steps is not None and metrics.n_steps >= max_steps:

@@ -3,7 +3,6 @@ assigned arch, run one forward + one train step + one decode step on CPU,
 assert output shapes and no NaNs.  (Full configs are exercised only via the
 dry-run.)"""
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp

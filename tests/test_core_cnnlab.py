@@ -11,8 +11,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import cost_model, device_models as dm, engines, plan, \
     scheduler, tradeoff
-from repro.core.layer_model import (AttentionSpec, ConvSpec, FCSpec, MLPSpec,
-                                    MoESpec, NetworkSpec, PoolSpec, SSMSpec,
+from repro.core.layer_model import (ConvSpec, FCSpec, MLPSpec,
+                                    MoESpec, NetworkSpec,
                                     alexnet_full_spec, alexnet_spec)
 
 

@@ -1,14 +1,12 @@
 """Integration tests: end-to-end training (loss actually decreases on
 structured data), checkpoint-resume exactness, serve loop, train CLI with
 preemption, sharding policy resolution."""
-import dataclasses
 import functools
 import subprocess
 import sys
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -142,7 +140,6 @@ def test_serve_cli_generates(tmp_path):
 
 # --------------------------------------------------------------- sharding
 def test_policy_tp_vs_fsdp_mode():
-    from repro.launch.mesh import make_host_mesh
     from jax.sharding import Mesh
     devs = np.asarray(jax.devices()[:1]).reshape(1, 1)
     mesh = Mesh(devs, ("data", "model"))

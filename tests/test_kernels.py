@@ -1,7 +1,6 @@
 """Per-kernel correctness: sweep shapes x dtypes, assert_allclose vs the
 pure-jnp oracles in kernels/ref.py.  All Pallas kernels run interpret=True
 (CPU container; TPU is the lowering target)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

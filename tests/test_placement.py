@@ -1,0 +1,274 @@
+"""Phase placement + disaggregated serving: the trade-off analyzer picks
+the paper's GPU/FPGA split for the two serving phases, the hand-off is
+priced by the offload-overhead model, and the disaggregated engine loop's
+outputs stay bit-identical to colocated serving."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import device_models as dm
+from repro.core import engines as engines_lib
+from repro.core.cost_model import transfer_cost
+from repro.core.layer_model import (AttentionSpec, MLPSpec, MoESpec,
+                                    NetworkSpec, SSMSpec)
+from repro.core.scheduler import schedule
+from repro.models import transformer as T
+from repro.serving import (DisaggregatedEngineLoop, EngineLoop,
+                           handoff_payload_bytes, phase_cost,
+                           phase_network_spec, place_phases,
+                           prefill_network_spec, synthetic_workload)
+
+TINY = T.ModelConfig(
+    name="place-tiny", n_layers=3, d_model=32, n_heads=4, n_kv_heads=2,
+    d_ff=64, vocab=64, attention_impl="dot", remat=False)
+
+PAPER_PAIR = (engines_lib.K40_LM_ENGINE, engines_lib.DE5_LM_ENGINE)
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return T.init_params(jax.random.PRNGKey(0), TINY)
+
+
+def _virtual_clock():
+    t = [0.0]
+
+    def now():
+        t[0] += 1e-3
+        return t[0]
+
+    return now
+
+
+# ---------------------------------------------------------- offload model
+def test_transfer_cost_free_on_same_device_and_scales_with_bytes():
+    free = transfer_cost(10**9, dm.TPU_V5E, dm.TPU_V5E)
+    assert free.t_transfer == 0.0 and free.energy_j == 0.0
+    a = transfer_cost(10**6, dm.K40_ROOFLINE, dm.DE5_ROOFLINE)
+    b = transfer_cost(2 * 10**6, dm.K40_ROOFLINE, dm.DE5_ROOFLINE)
+    assert b.t_transfer == pytest.approx(2 * a.t_transfer)
+    # neither paper board declares a link: the slower mem_bw bounds it
+    assert a.link_bw == min(dm.K40_ROOFLINE.mem_bw, dm.DE5_ROOFLINE.mem_bw)
+    assert a.energy_j > 0
+
+
+def test_plan_offload_overhead_prices_engine_switches():
+    net = NetworkSpec("mix", (
+        MLPSpec("big", d_model=256, d_ff=4096, seq=64),
+        AttentionSpec("attn", d_model=256, n_heads=8, n_kv_heads=8,
+                      seq=64, kv_len=64),
+    ))
+    plan = schedule(net, engines_lib.PLACEMENT_ENGINES, objective="energy")
+    boundaries = plan.offload_overhead()
+    switches = sum(a.engine != b.engine for a, b in
+                   zip(plan.assignments, plan.assignments[1:]))
+    assert len(boundaries) == switches
+    for la, lb, cost in boundaries:
+        assert cost.t_transfer > 0 and cost.bytes_moved > 0
+
+
+# ------------------------------------------------------------- placement
+def test_prefill_lands_compute_strong_decode_lands_bandwidth_strong():
+    """The paper's split applied to the serving phases: under the K40/DE5
+    roofline models, energy/perf-density placement puts compute-bound
+    prefill on the GPU and memory-bound decode on the low-power FPGA."""
+    for objective in ("energy", "perf_density"):
+        d = place_phases(TINY, PAPER_PAIR, objective=objective,
+                         prompt_len=256, gen_len=256, batch=8)
+        assert d.prefill_engine == "k40-roofline", objective
+        assert d.decode_engine == "de5-roofline", objective
+        assert not d.colocated
+
+
+def test_latency_placement_collapses_to_fastest_engine():
+    d = place_phases(TINY, PAPER_PAIR, objective="latency",
+                     prompt_len=256, gen_len=256, batch=8)
+    assert d.colocated and d.prefill_engine == "k40-roofline"
+
+
+def test_colocated_wins_when_handoff_dominates():
+    split = place_phases(TINY, PAPER_PAIR, objective="energy",
+                         prompt_len=256, gen_len=256, batch=8)
+    assert not split.colocated
+    choked = place_phases(TINY, PAPER_PAIR, objective="energy",
+                          prompt_len=256, gen_len=256, batch=8,
+                          link_bw=10.0)   # ~bytes/10s hand-off: prohibitive
+    assert choked.colocated
+
+
+def test_placement_ranks_all_pairs_and_is_deterministic():
+    d = place_phases(TINY, PAPER_PAIR, objective="energy",
+                     prompt_len=64, gen_len=64)
+    assert len(d.ranked) == 4            # 2 engines x 2 phases
+    values = [p.value for p in d.ranked]
+    assert values == sorted(values)
+    assert d.best is d.ranked[0]
+    d2 = place_phases(TINY, PAPER_PAIR, objective="energy",
+                      prompt_len=64, gen_len=64)
+    assert [(p.prefill.engine, p.decode.engine) for p in d.ranked] == \
+        [(p.prefill.engine, p.decode.engine) for p in d2.ranked]
+    assert "chosen" in d.summary()
+
+
+def test_measured_pricing_degrades_cleanly_without_cache(tmp_path):
+    d = place_phases(TINY, PAPER_PAIR, objective="energy",
+                     prompt_len=64, gen_len=64, price="measured",
+                     cache_path=str(tmp_path / "missing.json"))
+    a = place_phases(TINY, PAPER_PAIR, objective="energy",
+                     prompt_len=64, gen_len=64)
+    assert (d.prefill_engine, d.decode_engine) == \
+        (a.prefill_engine, a.decode_engine)
+
+
+def test_handoff_payload_counts_kv_and_recurrent_state():
+    plain = handoff_payload_bytes(TINY, prompt_len=64, dtype_bytes=2)
+    # 3 attn layers x 2 (K+V) x n_kv_heads x head_dim x 64 positions x 2B
+    kv = 3 * 2 * TINY.n_kv_heads * TINY.hd * 64 * 2
+    assert plain == kv + TINY.d_model * 2
+    # the implementation migrates whole slot rows: padded KV + int32 buffers
+    padded = handoff_payload_bytes(TINY, prompt_len=64, dtype_bytes=2,
+                                   slot_len=128)
+    assert padded == 2 * kv + TINY.d_model * 2 + 2 * 128 * 4
+    hybrid = T.ModelConfig(name="h", n_layers=4, d_model=32, n_heads=4,
+                           n_kv_heads=2, d_ff=64, vocab=64,
+                           block_pattern=("rec", "attn"))
+    assert handoff_payload_bytes(hybrid, prompt_len=64) > 0
+
+
+def test_phase_specs_shapes():
+    pre = prefill_network_spec(TINY, prompt_len=32)
+    dec = phase_network_spec(TINY, seq=1, kv_len=48)
+    assert all(l.seq == 32 for l in pre if hasattr(l, "seq"))
+    assert all(l.seq == 1 for l in dec if hasattr(l, "seq"))
+    # prefill is the compute-heavy phase per token
+    assert pre.flops(1) > dec.flops(1) * 8
+
+
+def test_phase_cost_rejects_unsupported_engine():
+    with pytest.raises(ValueError):
+        phase_cost(TINY, engines_lib.K40_ENGINE, "decode",
+                   prompt_len=8, gen_len=8)   # empirical K40: CNN kinds only
+
+
+# ------------------------------------------- decode-step engine builders
+@pytest.mark.parametrize("spec", [
+    AttentionSpec("a", d_model=32, n_heads=4, n_kv_heads=2, seq=1,
+                  kv_len=16, qkv_bias=True),
+    MLPSpec("m", d_model=32, d_ff=64, seq=1),
+    MoESpec("e", d_model=32, d_ff=64, seq=1, n_experts=4, top_k=2),
+    SSMSpec("s", d_model=32, d_state=8, d_conv=4, expand=2, seq=1,
+            variant="mamba1"),
+    SSMSpec("r", d_model=32, d_state=8, d_conv=4, expand=2, seq=1,
+            variant="rglru"),
+])
+def test_xla_engine_builds_decode_step_kinds(spec):
+    """ROADMAP follow-on: the decode-step spec kinds are now buildable, so
+    the profiling runtime can measure what admission/placement price."""
+    from repro.profiling import time_layer
+    eng = engines_lib.XLA_ENGINE
+    fn = eng.build(spec)
+    params = engines_lib.init_layer_params(spec, jax.random.PRNGKey(0))
+    y = fn(jnp.zeros((2, spec.seq, spec.d_model), jnp.float32), params)
+    assert y.shape == (2, spec.seq, spec.d_model)
+    assert bool(jnp.isfinite(y).all())
+    m = time_layer(eng, spec, batch=2, warmup=1, repeats=2)
+    assert m.t_median > 0 and m.flops == spec.flops(2)
+
+
+def test_decode_step_measurements_calibrate_serving_kinds():
+    """Measured decode-step timings produce a calibrated model covering the
+    kinds serving admission actually prices (not the CNN fallback)."""
+    from repro.profiling import calibrate_engine, profile_network
+    net = phase_network_spec(TINY, seq=1, kv_len=16)
+    ms = profile_network(net, [engines_lib.XLA_ENGINE], batch=2,
+                         warmup=1, repeats=2)
+    assert {m.kind for m in ms} == {"attention", "mlp"}
+    model = calibrate_engine(engines_lib.XLA_ENGINE, ms)
+    assert set(model.throughput) == {"attention", "mlp"}
+    assert all(v > 0 for v in model.throughput.values())
+
+
+# --------------------------------------------- disaggregated engine loop
+def test_disaggregated_outputs_bit_identical_to_colocated(tiny_params):
+    max_len = 8 + 12
+    reqs_c = synthetic_workload(9, rate=1e9, vocab=TINY.vocab,
+                                prompt_lens=(4, 8), gen_lens=(1, 3, 6, 12),
+                                seed=11)
+    reqs_d = synthetic_workload(9, rate=1e9, vocab=TINY.vocab,
+                                prompt_lens=(4, 8), gen_lens=(1, 3, 6, 12),
+                                seed=11)
+    colo = EngineLoop(TINY, tiny_params, n_slots=3, max_seq=max_len)
+    m_c = colo.run(reqs_c, now_fn=_virtual_clock())
+    dis = DisaggregatedEngineLoop(TINY, tiny_params, n_prefill_slots=2,
+                                  n_decode_slots=3, max_seq=max_len)
+    m_d = dis.run(reqs_d, now_fn=_virtual_clock())
+    assert m_c.n_done == m_d.n_done == 9
+    assert {r.rid: r.output for r in reqs_c} == \
+        {r.rid: r.output for r in reqs_d}
+    # every request crossed the phase boundary exactly once, and both
+    # pools drained
+    assert dis.handoff.n_handoffs == 9
+    assert dis.handoff.bytes_moved > 0
+    assert dis.prefill.pool.free_slot_count == 2
+    assert dis.decode.pool.free_slot_count == 3
+
+
+def test_disaggregated_handoff_priced_on_phase_devices(tiny_params):
+    reqs = synthetic_workload(4, rate=1e9, vocab=TINY.vocab,
+                              prompt_lens=(4,), gen_lens=(4,), seed=3)
+    dis = DisaggregatedEngineLoop(
+        TINY, tiny_params, n_prefill_slots=2, n_decode_slots=2, max_seq=8,
+        prefill_device=dm.K40_ROOFLINE, decode_device=dm.DE5_ROOFLINE)
+    dis.run(reqs, now_fn=_virtual_clock())
+    assert dis.handoff.n_handoffs == 4
+    # cross-device: the ledger carries a nonzero modeled transfer price
+    assert dis.handoff.modeled_s > 0
+    assert dis.handoff.modeled_s == pytest.approx(
+        dis.handoff.bytes_moved
+        / min(dm.K40_ROOFLINE.mem_bw, dm.DE5_ROOFLINE.mem_bw))
+
+
+def test_disaggregated_recycles_slots_and_does_not_leak_ssm_state():
+    cfg = T.ModelConfig(
+        name="place-rec", n_layers=4, d_model=32, n_heads=4, n_kv_heads=2,
+        d_ff=64, vocab=64, block_pattern=("rec", "attn"),
+        attention_impl="dot", remat=False)
+    params = T.init_params(jax.random.PRNGKey(2), cfg)
+    reqs_c = synthetic_workload(6, rate=1e9, vocab=cfg.vocab,
+                                prompt_lens=(4,), gen_lens=(4,), seed=21)
+    reqs_d = synthetic_workload(6, rate=1e9, vocab=cfg.vocab,
+                                prompt_lens=(4,), gen_lens=(4,), seed=21)
+    colo = EngineLoop(cfg, params, n_slots=1, max_seq=8)
+    colo.run(reqs_c, now_fn=_virtual_clock())
+    # 1 slot per phase for 6 requests: both sides recycle, and recurrent
+    # state must cross the boundary (and be reset between tenants)
+    dis = DisaggregatedEngineLoop(cfg, params, n_prefill_slots=1,
+                                  n_decode_slots=1, max_seq=8)
+    m = dis.run(reqs_d, now_fn=_virtual_clock())
+    assert m.n_done == 6
+    assert {r.rid: r.output for r in reqs_c} == \
+        {r.rid: r.output for r in reqs_d}
+
+
+def test_disaggregated_sheds_requests_that_never_fit_decode(tiny_params):
+    from repro.serving import Request
+    big = Request(rid=0, prompt=np.zeros((30,), np.int32), max_new_tokens=8)
+    ok = Request(rid=1, prompt=np.arange(4, dtype=np.int32),
+                 max_new_tokens=4)
+    dis = DisaggregatedEngineLoop(TINY, tiny_params, n_prefill_slots=2,
+                                  n_decode_slots=2, max_seq=16)
+    m = dis.run([big, ok], now_fn=_virtual_clock())
+    assert m.n_done == 1 and m.n_dropped == 1
+    assert big.output == []
+
+
+def test_per_phase_batchers_budget_independently(tiny_params):
+    dis = DisaggregatedEngineLoop(
+        TINY, tiny_params, n_prefill_slots=2, n_decode_slots=4, max_seq=16,
+        prefill_device=dm.K40_ROOFLINE, decode_device=dm.DE5_ROOFLINE)
+    pre, dec = dis.batchers
+    assert (pre.phase, dec.phase) == ("prefill", "decode")
+    assert pre.device_name == "nvidia-k40-roofline"
+    assert dec.device_name == "altera-de5-roofline"
+    assert pre.token_budget <= 2 and dec.token_budget <= 4

@@ -1,6 +1,5 @@
 """Profiling runtime: cache round-trip + environment invalidation,
 calibrator error reduction, and measured-pricing scheduler agreement."""
-import dataclasses
 import json
 
 import jax
@@ -10,7 +9,7 @@ import pytest
 from repro.core import engines as engines_lib
 from repro.core import scheduler
 from repro.core.cost_model import layer_cost
-from repro.core.layer_model import ConvSpec, FCSpec, NetworkSpec
+from repro.core.layer_model import FCSpec
 from repro.core.plan import compile_plan, init_network_params
 from repro.launch.profile import tiny_net
 from repro.models import transformer as T
@@ -74,6 +73,52 @@ def test_cache_invalidation_on_jax_version_change(tmp_path):
     # ... and invalidate_stale garbage-collects it
     assert loaded.invalidate_stale() == 1
     assert len(loaded) == 0
+
+
+def _run_validate(*args):
+    import os
+    import subprocess
+    import sys
+    src = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.profiling.cache", "--validate", *args],
+        capture_output=True, text=True, env=env)
+
+
+def test_cache_validate_cli_agrees_with_lookups(tmp_path):
+    """Regression: `--validate` used to exit 0 on caches no lookup could
+    use (schema-valid but empty, or entirely stale) while serve
+    --calibrated-cache then failed — the gate and the consumers must
+    agree on what a usable cache is."""
+    # missing file: a clean failure, not a traceback
+    r = _run_validate(str(tmp_path / "nope.json"))
+    assert r.returncode == 1
+    assert "no such file" in (r.stdout + r.stderr)
+    # schema-valid but zero entries: lookups would find nothing -> fail ...
+    empty = tmp_path / "empty.json"
+    empty.write_text(json.dumps({"schema": 1, "entries": {}}))
+    r = _run_validate(str(empty))
+    assert r.returncode == 1
+    assert "no usable entries" in (r.stdout + r.stderr)
+    # ... unless explicitly allowed
+    assert _run_validate(str(empty), "--allow-empty").returncode == 0
+    # entries from another environment are equally unusable here
+    stale = tmp_path / "stale.json"
+    cache = ProfileCache(str(stale))
+    cache.put(_measurement(TINY_FC, "xla", 1e-3,
+                           env={"jax_version": "0.0.1", "backend": "tpu"}))
+    cache.save()
+    r = _run_validate(str(stale))
+    assert r.returncode == 1
+    # a cache with a current-environment measurement passes
+    good = tmp_path / "good.json"
+    cache = ProfileCache(str(good))
+    cache.put(_measurement(TINY_FC, "xla", 1e-3))
+    cache.save()
+    assert _run_validate(str(good)).returncode == 0
 
 
 def test_cache_merge_and_invalidate(tmp_path):

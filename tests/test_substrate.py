@@ -11,9 +11,8 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.checkpoint import CheckpointManager, restore_latest, \
-    save_checkpoint
-from repro.data import DataConfig, SyntheticLM, TextFileLM, make_pipeline
+from repro.checkpoint import restore_latest, save_checkpoint
+from repro.data import DataConfig, SyntheticLM, TextFileLM
 from repro.optim import adamw, compression, schedules
 from repro.runtime import PreemptionHandler, StepTimer
 

@@ -12,8 +12,12 @@ their ratio is a machine-normalized throughput measure.  ``--absolute``
 additionally gates raw tok/s for same-host comparisons.
 
 Correctness gates always apply: every load's continuous outputs must be
-bit-identical to static, and the disaggregated run's outputs must be
-bit-identical to colocated.
+bit-identical to static, the disaggregated run's outputs must be
+bit-identical to colocated, and the ``streaming`` section must be present
+and well-formed — streamed outputs bit-identical to the completion pull,
+deltas concatenating to exactly the completion rows, and
+``ttft_dispatch <= ttft`` — so a malformed BENCH_serving.json fails the
+gate instead of slipping through.
 """
 from __future__ import annotations
 
@@ -25,6 +29,62 @@ from typing import List, Tuple
 
 def saturation_load(results: dict) -> dict:
     return max(results["loads"], key=lambda l: l["offered_rate_req_s"])
+
+
+# per-mode summaries the streaming section must carry, with the numeric
+# fields the TTFT/TPOT comparison reads (ServeMetrics.summary keys)
+_STREAMING_SUMMARY_KEYS = ("tok_per_s", "ttft_p50_s", "ttft_dispatch_p50_s",
+                           "tpot_p50_s", "tokens_streamed", "stream_deltas",
+                           "tokens_out")
+_STREAMING_BOOL_KEYS = ("bit_identical", "delta_concat_identical",
+                        "ttft_dispatch_leq_ttft")
+
+
+def validate_streaming(fresh: dict) -> List[Tuple[str, bool, str]]:
+    """Schema + correctness checks for the ``streaming`` section."""
+    checks: List[Tuple[str, bool, str]] = []
+    section = fresh.get("streaming")
+    if not isinstance(section, dict):
+        return [("streaming section present", False,
+                 f"missing or not an object: {type(section).__name__}")]
+    problems: List[str] = []
+    for mode in ("colocated", "disaggregated"):
+        entry = section.get(mode)
+        if not isinstance(entry, dict):
+            problems.append(f"{mode}: missing")
+            continue
+        for kind in ("completion", "streaming"):
+            summ = entry.get(kind)
+            if not isinstance(summ, dict):
+                problems.append(f"{mode}.{kind}: missing summary")
+                continue
+            for k in _STREAMING_SUMMARY_KEYS:
+                if not isinstance(summ.get(k), (int, float)):
+                    problems.append(f"{mode}.{kind}.{k}: not a number")
+        for k in _STREAMING_BOOL_KEYS:
+            if not isinstance(entry.get(k), bool):
+                problems.append(f"{mode}.{k}: not a bool")
+        strm = entry.get("streaming")
+        if isinstance(strm, dict) and isinstance(
+                strm.get("tokens_streamed"), (int, float)):
+            # streaming mode must deliver every output token incrementally
+            if strm["tokens_streamed"] != strm.get("tokens_out"):
+                problems.append(
+                    f"{mode}: streamed {strm['tokens_streamed']} of "
+                    f"{strm.get('tokens_out')} output tokens")
+    checks.append(("streaming section schema", not problems,
+                   "; ".join(problems) if problems else
+                   "colocated + disaggregated, completion + streaming "
+                   "summaries well-formed"))
+    for mode in ("colocated", "disaggregated"):
+        entry = section.get(mode)
+        if not isinstance(entry, dict):
+            continue
+        ok = all(entry.get(k) is True for k in _STREAMING_BOOL_KEYS)
+        checks.append((
+            f"streamed outputs identical to completion pull ({mode})", ok,
+            ", ".join(f"{k}={entry.get(k)}" for k in _STREAMING_BOOL_KEYS)))
+    return checks
 
 
 def compare(baseline: dict, fresh: dict, *, threshold: float,
@@ -62,6 +122,7 @@ def compare(baseline: dict, fresh: dict, *, threshold: float,
                        bool(dis["bit_identical"]),
                        f"{dis['handoff']['n_handoffs']} handoffs, "
                        f"{dis['handoff']['bytes_moved']} bytes"))
+    checks.extend(validate_streaming(fresh))
     return checks
 
 

@@ -95,6 +95,12 @@ def main() -> None:
                     help="continuous path: KV pool slots")
     ap.add_argument("--rate", type=float, default=16.0,
                     help="continuous path: offered load (req/s)")
+    ap.add_argument("--stream", action="store_true",
+                    help="continuous path: stream tokens incrementally — "
+                         "the engine syncs at burst boundaries and prints "
+                         "each request's newly readable tokens (TTFT then "
+                         "measures delivered tokens; costs one host sync "
+                         "per burst)")
     ap.add_argument("--step-slo-ms", type=float, default=None,
                     help="continuous path: per-step latency objective the "
                          "cost model prices admission against")
@@ -132,6 +138,9 @@ def main() -> None:
                                      or args.decode_engine):
         ap.error("--placement auto chooses the engines; drop "
                  "--prefill-engine/--decode-engine or use --placement disagg")
+    if args.stream and args.static_batching:
+        ap.error("--stream needs the continuous engine (the static server "
+                 "only surfaces tokens at batch end)")
 
     arch = registry.get(args.arch)
     cfg = arch.smoke if args.scale == "smoke" else arch.config
@@ -209,6 +218,14 @@ def main() -> None:
                              f"{', '.join(sorted(ENGINES_BY_NAME))})")
         return ENGINES_BY_NAME[name]
 
+    on_delta = None
+    if args.stream:
+        def on_delta(d):
+            toks = ",".join(str(t) for t in d.tokens)
+            tag = " [done]" if d.done else ""
+            print(f"[stream] t={d.t:8.3f}s rid={d.rid:>4} "
+                  f"+{len(d.tokens)} [{toks}]{tag}", flush=True)
+
     step_slo_s = None if args.step_slo_ms is None else args.step_slo_ms / 1e3
     pre_eng = dec_eng = None
     if args.placement == "auto":
@@ -251,7 +268,7 @@ def main() -> None:
             prefill_device=_phase_device(pre_eng),
             decode_device=_phase_device(dec_eng), step_slo_s=step_slo_s)
         with mesh:
-            metrics = engine.run(requests)
+            metrics = engine.run(requests, on_delta=on_delta)
         for b in engine.batchers:
             print(f"[serve] {b.phase} token budget {b.token_budget}/"
                   f"{b.pool.n_slots} slots (device model {b.device_name})")
@@ -269,7 +286,7 @@ def main() -> None:
             device_name=args.device_model, device_model=device_model,
             step_slo_s=step_slo_s)
         with mesh:
-            metrics = engine.run(requests)
+            metrics = engine.run(requests, on_delta=on_delta)
         print(f"[serve] token budget {engine.batcher.token_budget}/"
               f"{args.slots} slots (device model "
               f"{engine.batcher.device_name})")

@@ -1,14 +1,19 @@
 """Continuous-batching serving runtime (the CNNLab middleware idea applied
 to traffic): request lifecycle + arrivals, slot-based paged KV pool,
 cost-model-priced admission, the jitted engine loop with serving metrics
-(TTFT / TPOT / tok-s / p50 / p99), and phase-disaggregated serving —
-prefill and decode placed on separate engines by the trade-off analyzer
-(`placement`), with an explicitly-priced KV hand-off (`disagg`)."""
+(TTFT / TPOT / tok-s / p50 / p99), the unified open-loop driver with the
+streaming output channel (`driver` — both loops instantiate it; streamed
+deltas are bit-identical to completion pulls), and phase-disaggregated
+serving — prefill and decode placed on separate engines by the trade-off
+analyzer (`placement`), with an explicitly-priced KV hand-off
+(`disagg`)."""
 from .batcher import (ContinuousBatcher, decode_network_spec,
                       phase_network_spec, step_time_model,
                       token_budget_for_slo)
 from .disagg import DisaggregatedEngineLoop, HandoffLedger
-from .engine_loop import EngineLoop, ServeMetrics, SlotEngine
+from .driver import (OpenLoopDriver, ServeMetrics, StreamDelta, TokenSink,
+                     sample_pools)
+from .engine_loop import EngineLoop, SlotEngine
 from .kv_pool import KVPool
 from .placement import (PhaseCost, PlacementDecision, handoff_payload_bytes,
                         phase_cost, place_phases, prefill_network_spec)
@@ -16,9 +21,10 @@ from .request import Request, RequestState, synthetic_workload
 
 __all__ = [
     "ContinuousBatcher", "DisaggregatedEngineLoop", "EngineLoop",
-    "HandoffLedger", "KVPool", "PhaseCost", "PlacementDecision", "Request",
-    "RequestState", "ServeMetrics", "SlotEngine", "decode_network_spec",
+    "HandoffLedger", "KVPool", "OpenLoopDriver", "PhaseCost",
+    "PlacementDecision", "Request", "RequestState", "ServeMetrics",
+    "SlotEngine", "StreamDelta", "TokenSink", "decode_network_spec",
     "handoff_payload_bytes", "phase_cost", "phase_network_spec",
-    "place_phases", "prefill_network_spec", "step_time_model",
-    "synthetic_workload", "token_budget_for_slo",
+    "place_phases", "prefill_network_spec", "sample_pools",
+    "step_time_model", "synthetic_workload", "token_budget_for_slo",
 ]

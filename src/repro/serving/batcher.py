@@ -144,13 +144,26 @@ class ContinuousBatcher:
         # cumulative admission accounting (surfaced by launch/serve.py)
         self.n_admitted = 0
         self.n_rejected = 0              # dropped: deadline passed / never fits
+        # rids currently deferred and not yet admitted/dropped.  Bounded by
+        # the live queue length: a rid is discarded the moment its request
+        # resolves, so a long-lived stream doesn't leak a set entry per
+        # request.  The ever-deferred total lives in the monotone counter.
         self._deferred_rids: set = set()
+        self._n_deferred_total = 0
 
     @property
     def n_deferred(self) -> int:
         """Distinct requests ever left queued by an admit pass (budget or
-        pool pressure) — comparable to the admitted/rejected counts."""
-        return len(self._deferred_rids)
+        pool pressure) — comparable to the admitted/rejected counts.
+        Monotone counter; re-deferrals of a still-queued request count
+        once."""
+        return self._n_deferred_total
+
+    def note_resolved(self, rid: int) -> None:
+        """Forget a deferred rid whose request left the queue outside an
+        admit pass (e.g. the disaggregated loop's pre-admission shedding),
+        keeping the deferred set bounded by the live queue."""
+        self._deferred_rids.discard(rid)
 
     def admit(self, queue: List[Request], n_active: int,
               now: float) -> AdmissionDecision:
@@ -185,5 +198,12 @@ class ContinuousBatcher:
             admitted.append(queue.pop(i))
         self.n_admitted += len(admitted)
         self.n_rejected += len(dropped)
-        self._deferred_rids.update(r.rid for r in queue)
+        for r in admitted:
+            self._deferred_rids.discard(r.rid)
+        for r in dropped:
+            self._deferred_rids.discard(r.rid)
+        for r in queue:
+            if r.rid not in self._deferred_rids:
+                self._deferred_rids.add(r.rid)
+                self._n_deferred_total += 1
         return AdmissionDecision(admitted=admitted, dropped=dropped)

@@ -30,13 +30,13 @@ import dataclasses
 import time
 from typing import Callable, Dict, List, Optional
 
-import numpy as np
-
 from ..core import device_models
 from ..core.cost_model import transfer_cost
 from ..models import transformer as T
 from .batcher import ContinuousBatcher
-from .engine_loop import ServeMetrics, SlotEngine
+from .driver import (OpenLoopDriver, ServeMetrics, StreamDelta, TokenSink,
+                     burst_size, sample_pools)
+from .engine_loop import SlotEngine
 from .kv_pool import KVPool
 from .request import Request, RequestState
 
@@ -60,9 +60,14 @@ class HandoffLedger:
 
 
 class DisaggregatedEngineLoop:
-    """Two SlotEngines (prefill + decode) with explicit slot migration."""
+    """Two SlotEngines (prefill + decode) with explicit slot migration.
 
-    BURST_CAP_PENDING = 4
+    The open-loop scaffolding lives in :class:`~repro.serving.driver.
+    OpenLoopDriver` (shared with the colocated loop); this class provides
+    the two-engine hook implementations: admission binds the prefill phase
+    only, the completion scan detects the phase boundary, and migration at
+    admission passes carries slots onto the decode engine.
+    """
 
     def __init__(self, cfg: T.ModelConfig, params, *, n_prefill_slots: int,
                  n_decode_slots: int, max_seq: int, block_size: int = 16,
@@ -91,6 +96,8 @@ class DisaggregatedEngineLoop:
                             or device_models.get(decode_device_name))
         self._handoff_link_bw = handoff_link_bw
         self.handoff = HandoffLedger()
+        # prefill-complete requests awaiting migration (reset per run)
+        self._ready: List[Request] = []
 
     def warmup(self) -> None:
         self.prefill.warmup()
@@ -101,8 +108,7 @@ class DisaggregatedEngineLoop:
         return (self.prefill_batcher, self.decode_batcher)
 
     # ---- migration -------------------------------------------------------
-    def _migrate(self, req: Request, prefill_active: np.ndarray,
-                 decode_active: np.ndarray) -> bool:
+    def _migrate(self, req: Request) -> bool:
         """Move a prefill-complete request onto the decode engine.  Returns
         False (leaving the request parked in its prefill slot) when the
         decode engine's token budget or pool cannot take it yet."""
@@ -112,18 +118,13 @@ class DisaggregatedEngineLoop:
             return False
         state = self.prefill.export_slot(req.slot)
         written = self.prefill.pool.lease(req.rid).written_tokens
-        prefill_active[req.slot] = False
         self.prefill.release(req)
         req.slot = self.decode.pool.alloc(req.rid, req.total_tokens)
-        self.decode.import_slot(req.slot, state)
-        self.decode.slots[req.slot] = req
-        self.decode.steps_done[req.slot] = 0
         # the prefill engine already produced the first sample; the decode
         # engine owes the remaining gen - 1 steps
-        self.decode.steps_total[req.slot] = req.max_new_tokens - 1
+        self.decode.adopt(req, state, steps_total=req.max_new_tokens - 1)
         # carry the KV-write accounting into the decode pool's ledger
         self.decode.pool.note_write(req.rid, min(written, req.total_tokens))
-        decode_active[req.slot] = True
         req.state = RequestState.DECODE
         self.decode_batcher.n_admitted += 1      # migration ledger
 
@@ -139,123 +140,117 @@ class DisaggregatedEngineLoop:
     # ---- main loop -------------------------------------------------------
     def run(self, requests: List[Request], *,
             now_fn: Callable[[], float] = time.perf_counter,
-            max_steps: Optional[int] = None) -> ServeMetrics:
-        metrics = ServeMetrics()
-        pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
-        queue: List[Request] = []
-        ready: List[Request] = []        # prefill done, awaiting migration
-        pre_active = np.zeros((self.prefill.pool.n_slots,), bool)
-        dec_active = np.zeros((self.decode.pool.n_slots,), bool)
-        t0 = now_fn()
-        skew = 0.0
-        clock = lambda: now_fn() - t0 + skew
+            max_steps: Optional[int] = None,
+            on_delta: Optional[Callable[[StreamDelta], None]] = None
+            ) -> ServeMetrics:
+        """Serve `requests` via the shared open-loop driver.  ``on_delta``
+        streams: the prefill engine emits each request's first sample at its
+        phase boundary, the decode engine the rest."""
+        return OpenLoopDriver(self).run(requests, now_fn=now_fn,
+                                        max_steps=max_steps,
+                                        on_delta=on_delta)
 
-        def busy() -> bool:
-            return bool(queue or ready or self.prefill.n_active
-                        or self.decode.n_active)
+    # ---- OpenLoopDriver hooks --------------------------------------------
+    def start_run(self) -> None:
+        self._ready = []
 
-        while pending or busy():
-            now = clock()
-            while pending and pending[0].arrival <= now:
-                queue.append(pending.pop(0))
-            if not busy():
-                skew += pending[0].arrival - now
+    def in_flight(self) -> bool:
+        return bool(self._ready or self.prefill.n_active
+                    or self.decode.n_active)
+
+    def runnable(self) -> bool:
+        return bool(self.prefill.n_active or self.decode.n_active)
+
+    def backlogged(self, queue: List[Request]) -> bool:
+        # bursts stay short while hand-offs or queued arrivals wait so
+        # migration latency is bounded
+        return bool(queue or self._ready)
+
+    def admit(self, queue: List[Request], now: float,
+              metrics: ServeMetrics) -> None:
+        # requests that can never fit the DECODE pool would park in a
+        # prefill slot forever: shed them before admission
+        i = 0
+        while i < len(queue):
+            r = queue[i]
+            if (r.total_tokens > self.decode.pool.max_seq
+                    or self.decode.pool.blocks_needed(r.total_tokens)
+                    > self.decode.pool.total_blocks):
+                r.state = RequestState.DROPPED
+                metrics.n_dropped += 1
+                self.prefill_batcher.note_resolved(r.rid)
+                queue.pop(i)
                 continue
+            i += 1
 
-            # requests that can never fit the DECODE pool would park in a
-            # prefill slot forever: shed them before admission
-            i = 0
-            while i < len(queue):
-                r = queue[i]
-                if (r.total_tokens > self.decode.pool.max_seq
-                        or self.decode.pool.blocks_needed(r.total_tokens)
-                        > self.decode.pool.total_blocks):
-                    r.state = RequestState.DROPPED
-                    metrics.n_dropped += 1
-                    queue.pop(i)
-                    continue
-                i += 1
+        # migrate phase-boundary requests (decode budget + pool gated)
+        self._ready = [req for req in self._ready if not self._migrate(req)]
 
-            # migrate phase-boundary requests (decode budget + pool gated)
-            ready = [req for req in ready
-                     if not self._migrate(req, pre_active, dec_active)]
+        # admit new arrivals into the prefill engine; ready requests
+        # still hold prefill slots, so n_active covers them
+        decision = self.prefill_batcher.admit(
+            queue, self.prefill.n_active, now)
+        metrics.n_dropped += len(decision.dropped)
+        for req in decision.admitted:
+            # the first sample lands after plen steps; the rest of the
+            # generation belongs to the decode engine
+            self.prefill.bind(req, steps_total=req.prompt_len)
 
-            # admit new arrivals into the prefill engine; ready requests
-            # still hold prefill slots, so n_active covers them
-            decision = self.prefill_batcher.admit(
-                queue, self.prefill.n_active, now)
-            metrics.n_dropped += len(decision.dropped)
-            for req in decision.admitted:
-                # the first sample lands after plen steps; the rest of the
-                # generation belongs to the decode engine
-                self.prefill.bind(req, steps_total=req.prompt_len)
-                pre_active[req.slot] = True
+    def dispatch(self, throttle: bool, budget: Optional[int]) -> int:
+        # one burst per engine per driver iteration; parked (phase-boundary)
+        # prefill slots are active but not burstable
+        n = 0
+        for eng in (self.prefill, self.decode):
+            mask = eng.active & (eng.steps_done < eng.steps_total)
+            if not mask.any():
+                continue
+            remaining = (eng.steps_total - eng.steps_done)[mask]
+            burst = burst_size(
+                int(remaining.min()), throttle=throttle,
+                budget=None if budget is None else budget - n)
+            if burst > 0:
+                eng.dispatch(burst, mask)
+                n += burst
+        return n
 
-            if not self.prefill.n_active and not self.decode.n_active:
-                continue                 # nothing runnable (pool pressure)
+    def sample(self, metrics: ServeMetrics) -> None:
+        # capacity-weighted across the two pools: occupancy by total_blocks,
+        # utilization by allocated-block capacity (an unweighted mean
+        # misreports pressure when --prefill-slots != --slots)
+        occ, util = sample_pools((self.prefill.pool, self.decode.pool))
+        metrics.occupancy.append(occ)
+        metrics.utilization.append(util)
 
-            # one burst per engine; both stay short while hand-offs or
-            # arrivals are waiting so migration latency is bounded
-            throttle = bool(pending or queue or ready)
-            pre_burstable = pre_active & (self.prefill.steps_done
-                                          < self.prefill.steps_total)
-            if pre_burstable.any():
-                remaining = (self.prefill.steps_total
-                             - self.prefill.steps_done)[pre_burstable]
-                burst = int(remaining.min())
-                if throttle:
-                    burst = min(burst, self.BURST_CAP_PENDING)
-                if max_steps is not None:
-                    burst = min(burst, max(max_steps - metrics.n_steps, 0))
-                if burst:
-                    self.prefill.dispatch(burst, pre_burstable)
-                    metrics.n_steps += burst
-            dec_burstable = dec_active & (self.decode.steps_done
-                                          < self.decode.steps_total)
-            if dec_burstable.any():
-                remaining = (self.decode.steps_total
-                             - self.decode.steps_done)[dec_burstable]
-                burst = int(remaining.min())
-                if throttle:
-                    burst = min(burst, self.BURST_CAP_PENDING)
-                if max_steps is not None:
-                    burst = min(burst, max(max_steps - metrics.n_steps, 0))
-                if burst:
-                    self.decode.dispatch(burst, dec_burstable)
-                    metrics.n_steps += burst
-            metrics.occupancy.append(
-                (self.prefill.pool.occupancy()
-                 + self.decode.pool.occupancy()) / 2)
-            metrics.utilization.append(
-                (self.prefill.pool.utilization()
-                 + self.decode.pool.utilization()) / 2)
-
-            now = clock()
-            # prefill completions -> phase boundary
-            ready_rids = {r.rid for r in ready}
-            for s, req in enumerate(self.prefill.slots):
-                if req is None or req.rid in ready_rids:
-                    continue
-                req.n_fed = int(self.prefill.steps_done[s])
-                if self.prefill.steps_done[s] >= self.prefill.steps_total[s]:
-                    # first sample landed inside this burst
-                    req.state = RequestState.DECODE
-                    req.t_first_token = now
-                    ready.append(req)
-            # decode completions
-            for s, req in enumerate(self.decode.slots):
-                if req is None:
-                    continue
+    def scan(self, clock: Callable[[], float], metrics: ServeMetrics,
+             sink: TokenSink) -> None:
+        now = clock()
+        # prefill completions -> phase boundary
+        ready_rids = {r.rid for r in self._ready}
+        for s, req in enumerate(self.prefill.slots):
+            if req is None or req.rid in ready_rids:
+                continue
+            req.n_fed = int(self.prefill.steps_done[s])
+            if self.prefill.steps_done[s] >= self.prefill.steps_total[s]:
+                # the burst containing the first sample has been dispatched
+                req.state = RequestState.DECODE
+                req.t_first_dispatch = now
+                self._ready.append(req)
+        for s, req in enumerate(self.decode.slots):
+            if req is not None:
                 req.n_fed = req.prompt_len + int(self.decode.steps_done[s])
-                if self.decode.steps_done[s] >= self.decode.steps_total[s]:
-                    row = self.decode.pull_output(s)
-                    req.output = row[:req.max_new_tokens].tolist()
-                    req.state = RequestState.DONE
-                    req.t_done = clock()
-                    self.decode.release(req)
-                    dec_active[s] = False
-                    metrics.observe(req)
-            if max_steps is not None and metrics.n_steps >= max_steps:
-                break
-        metrics.elapsed_s = clock()
-        return metrics
+        # streaming: burst-boundary sync per engine — the prefill engine
+        # emits first samples (including parked slots), the decode engine
+        # the rest of each generation
+        sink.drain(self.prefill, clock)
+        sink.drain(self.decode, clock)
+        # decode completions
+        for s, req in enumerate(self.decode.slots):
+            if req is None:
+                continue
+            if self.decode.steps_done[s] >= self.decode.steps_total[s]:
+                row = self.decode.pull_output(s)
+                req.state = RequestState.DONE
+                req.t_done = clock()
+                sink.finish(req, row[:req.max_new_tokens], req.t_done)
+                self.decode.release(req)
+                metrics.observe(req)

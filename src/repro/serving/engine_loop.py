@@ -23,13 +23,15 @@ SlotEngine (colocated serving), while
 prefill engine and a decode engine — and migrates slots between them
 (`export_slot`/`import_slot`) at the phase boundary.
 
-The loop is driven by a clock function so tests can run it reproducibly;
-the CLI and benchmark use wall time, which is what the open-loop arrival
-process (request.synthetic_workload) is offered against.
+The open-loop scaffolding (arrival drain, idle fast-forward skew clock,
+pending-aware burst capping, completion scan, metrics, streaming channel)
+lives in :mod:`repro.serving.driver`; this module provides the loop hooks
+the driver calls.  The loop is driven by a clock function so tests can run
+it reproducibly; the CLI and benchmark use wall time, which is what the
+open-loop arrival process (request.synthetic_workload) is offered against.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Callable, Dict, List, Optional
 
@@ -39,61 +41,13 @@ import numpy as np
 
 from ..models import transformer as T
 from .batcher import ContinuousBatcher
+from .driver import (OpenLoopDriver, ServeMetrics, StreamDelta, TokenSink,
+                     burst_size, sample_pools)
 from .kv_pool import KVPool
 from .request import Request, RequestState
 
-
-def _percentile(xs: List[float], q: float) -> float:
-    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
-
-
-@dataclasses.dataclass
-class ServeMetrics:
-    n_done: int = 0
-    n_dropped: int = 0
-    n_steps: int = 0
-    tokens_out: int = 0
-    tokens_in: int = 0
-    elapsed_s: float = 0.0
-    ttft_s: List[float] = dataclasses.field(default_factory=list)
-    tpot_s: List[float] = dataclasses.field(default_factory=list)
-    latency_s: List[float] = dataclasses.field(default_factory=list)
-    occupancy: List[float] = dataclasses.field(default_factory=list)
-    utilization: List[float] = dataclasses.field(default_factory=list)
-
-    def observe(self, req: Request) -> None:
-        self.n_done += 1
-        self.tokens_out += len(req.output)
-        self.tokens_in += req.prompt_len
-        if req.ttft is not None:
-            self.ttft_s.append(req.ttft)
-        if req.tpot is not None:
-            self.tpot_s.append(req.tpot)
-        if req.t_done is not None:
-            self.latency_s.append(req.t_done - req.arrival)
-
-    def summary(self) -> Dict[str, float]:
-        dt = max(self.elapsed_s, 1e-9)
-        return {
-            "requests_done": self.n_done,
-            "requests_dropped": self.n_dropped,
-            "steps": self.n_steps,
-            "tokens_in": self.tokens_in,
-            "tokens_out": self.tokens_out,
-            "elapsed_s": self.elapsed_s,
-            "tok_per_s": self.tokens_out / dt,
-            "req_per_s": self.n_done / dt,
-            "ttft_p50_s": _percentile(self.ttft_s, 50),
-            "ttft_p99_s": _percentile(self.ttft_s, 99),
-            "tpot_p50_s": _percentile(self.tpot_s, 50),
-            "tpot_p99_s": _percentile(self.tpot_s, 99),
-            "latency_p50_s": _percentile(self.latency_s, 50),
-            "latency_p99_s": _percentile(self.latency_s, 99),
-            "kv_occupancy_mean": (float(np.mean(self.occupancy))
-                                  if self.occupancy else 0.0),
-            "kv_utilization_mean": (float(np.mean(self.utilization))
-                                    if self.utilization else 0.0),
-        }
+__all__ = ["EngineLoop", "ServeMetrics", "SlotEngine", "StreamDelta",
+           "TokenSink"]
 
 
 def _fused_step(params, cfg, cache, prompts, plens, last_tok, out_buf,
@@ -150,9 +104,11 @@ class SlotEngine:
         self._out_buf = jnp.zeros((n_slots, self.max_gen), jnp.int32)
         self._burst_fns: Dict[int, Callable] = {}
         self.slots: List[Optional[Request]] = [None] * n_slots
-        # host-side schedule state: active steps done / total per slot
+        # host-side schedule state: active steps done / total per slot, plus
+        # the dispatch mask (bind sets, release clears)
         self.steps_done = np.zeros((n_slots,), np.int64)
         self.steps_total = np.zeros((n_slots,), np.int64)
+        self.active = np.zeros((n_slots,), bool)
 
     def _burst_fn(self, k: int) -> Callable:
         """Jitted scan of k fused steps — one dispatch per bucket instead of
@@ -206,6 +162,7 @@ class SlotEngine:
         self.slots[s] = req
         self.steps_done[s] = 0
         self.steps_total[s] = steps_total
+        self.active[s] = True
 
     def dispatch(self, burst: int, active_np: np.ndarray) -> None:
         """Dispatch `burst` fused steps over the active slots (bucketed
@@ -227,24 +184,33 @@ class SlotEngine:
         """Sync and read one slot's sampled-token row."""
         return np.asarray(self._out_buf[slot])
 
+    def pull_outputs(self) -> np.ndarray:
+        """Sync and read the whole (n_slots, max_gen) output buffer — one
+        host sync per burst boundary, shared by every streaming slot."""
+        return np.asarray(self._out_buf)
+
     def release(self, req: Request) -> None:
         """Free the request's slot + pool lease on this engine."""
         self.pool.free(req.rid)
         self.slots[req.slot] = None
+        self.active[req.slot] = False
 
     # ---- slot hand-off (phase disaggregation) ----------------------------
     def export_slot(self, s: int) -> Dict:
         """Snapshot every per-slot tensor a request needs to resume on
-        another engine: KV rows / recurrent states / position, the prompt
-        row + feed state, and the sampled-output row.  This is the payload
-        the placement analyzer prices with the offload-overhead model."""
+        another engine: KV rows / recurrent states / position, the per-slot
+        cross-attention features (vision/enc-dec caches), the prompt row +
+        feed state, and the sampled-output row.  This is the payload the
+        placement analyzer prices with the offload-overhead model."""
         blocks, rem = self.cache["layers"]
+        cross = self.cache.get("cross")
         take_b = lambda a: a[:, s] if getattr(a, "ndim", 0) >= 2 else a
         take_r = lambda a: a[s] if getattr(a, "ndim", 0) >= 1 else a
         return {
             "blocks": jax.tree.map(take_b, blocks),
             "rem": jax.tree.map(take_r, rem),
             "pos": self.cache["pos"][s],
+            "cross": None if cross is None else cross[s],
             "prompt": self._prompts[s],
             "plen": self._plens[s],
             "last_tok": self._last_tok[s],
@@ -254,22 +220,51 @@ class SlotEngine:
     def import_slot(self, s: int, state: Dict) -> None:
         """Install an exported slot snapshot into slot ``s`` (bit-exact:
         the imported request decodes the same tokens it would have
-        produced had it stayed on the exporting engine)."""
+        produced had it stayed on the exporting engine).
+
+        The cache is rebuilt by copy-and-update of ``self.cache`` so every
+        key ``init_slot_cache`` carries survives the migration (a literal
+        rebuild used to silently drop unknown keys), and per-slot cross-
+        attention rows are migrated rather than shared."""
+        cross = self.cache.get("cross")
+        if cross is not None and state.get("cross") is None:
+            raise ValueError(
+                "cross-attention cache present on the importing engine "
+                "but the exported slot carries no cross row — the "
+                "exporting engine was built for a different config")
+        if cross is None and state.get("cross") is not None:
+            raise ValueError(
+                "exported slot carries a cross-attention row but the "
+                "importing engine has no cross cache — silently dropping "
+                "it would corrupt the migrated request (engines built for "
+                "different configs)")
         blocks, rem = self.cache["layers"]
         set_b = lambda a, v: (a.at[:, s].set(v)
                               if getattr(a, "ndim", 0) >= 2 else a)
         set_r = lambda a, v: (a.at[s].set(v)
                               if getattr(a, "ndim", 0) >= 1 else a)
-        self.cache = {
-            "layers": (jax.tree.map(set_b, blocks, state["blocks"]),
-                       jax.tree.map(set_r, rem, state["rem"])),
-            "pos": self.cache["pos"].at[s].set(state["pos"]),
-            "cross": self.cache.get("cross"),
-        }
+        cache = dict(self.cache)
+        cache["layers"] = (jax.tree.map(set_b, blocks, state["blocks"]),
+                           jax.tree.map(set_r, rem, state["rem"]))
+        cache["pos"] = self.cache["pos"].at[s].set(state["pos"])
+        if cross is not None:
+            cache["cross"] = cross.at[s].set(state["cross"])
+        self.cache = cache
         self._prompts = self._prompts.at[s].set(state["prompt"])
         self._plens = self._plens.at[s].set(state["plen"])
         self._last_tok = self._last_tok.at[s].set(state["last_tok"])
         self._out_buf = self._out_buf.at[s].set(state["out_row"])
+
+    def adopt(self, req: Request, state: Dict, *, steps_total: int) -> None:
+        """Take over a migrated request: install its snapshot into the slot
+        the pool already assigned (``req.slot``) and reset the per-slot
+        schedule for the steps this engine owes."""
+        s = req.slot
+        self.import_slot(s, state)
+        self.slots[s] = req
+        self.steps_done[s] = 0
+        self.steps_total[s] = steps_total
+        self.active[s] = True
 
     @staticmethod
     def state_nbytes(state: Dict) -> int:
@@ -278,11 +273,13 @@ class SlotEngine:
 
 
 class EngineLoop:
-    """Colocated serving: one SlotEngine runs both phases of every request."""
+    """Colocated serving: one SlotEngine runs both phases of every request.
 
-    # with arrivals pending, bursts stay short so admission latency is
-    # bounded; otherwise a burst runs to the next completion boundary
-    BURST_CAP_PENDING = 4
+    The open-loop scaffolding lives in :class:`~repro.serving.driver.
+    OpenLoopDriver`; this class provides the colocated hook implementations
+    (admission binds both phases onto the one engine, completion pulls the
+    whole output row).
+    """
 
     def __init__(self, cfg: T.ModelConfig, params, *, n_slots: int,
                  max_seq: int, block_size: int = 16,
@@ -309,78 +306,81 @@ class EngineLoop:
 
     def run(self, requests: List[Request], *,
             now_fn: Callable[[], float] = time.perf_counter,
-            max_steps: Optional[int] = None) -> ServeMetrics:
+            max_steps: Optional[int] = None,
+            on_delta: Optional[Callable[[StreamDelta], None]] = None
+            ) -> ServeMetrics:
         """Serve `requests` (an arrival-stamped open-loop stream) to
-        completion.  Returns the aggregate metrics."""
+        completion via the shared open-loop driver.  Returns the aggregate
+        metrics; ``on_delta`` streams newly readable tokens at burst
+        boundaries."""
+        return OpenLoopDriver(self).run(requests, now_fn=now_fn,
+                                        max_steps=max_steps,
+                                        on_delta=on_delta)
+
+    # ---- OpenLoopDriver hooks --------------------------------------------
+    def start_run(self) -> None:
+        pass                             # all per-run state lives on engines
+
+    def in_flight(self) -> bool:
+        return self.engine.n_active > 0
+
+    def runnable(self) -> bool:
+        return self.engine.n_active > 0
+
+    def backlogged(self, queue: List[Request]) -> bool:
+        return False                     # only pending arrivals throttle
+
+    def admit(self, queue: List[Request], now: float,
+              metrics: ServeMetrics) -> None:
+        decision = self.batcher.admit(queue, self.engine.n_active, now)
+        metrics.n_dropped += len(decision.dropped)
+        for req in decision.admitted:
+            # greedy decoding with known lengths: completion is
+            # deterministic — the final sample lands after
+            # plen + gen - 1 active steps
+            self.engine.bind(req, steps_total=(req.prompt_len
+                                               + req.max_new_tokens - 1))
+
+    def dispatch(self, throttle: bool, budget: Optional[int]) -> int:
+        # burst: dispatch steps to the next completion boundary without
+        # any host sync; the device chain pipelines behind dispatch
         eng = self.engine
-        metrics = ServeMetrics()
-        pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
-        queue: List[Request] = []
-        active_np = np.zeros((self.pool.n_slots,), bool)
-        t0 = now_fn()
-        skew = 0.0                       # idle fast-forward (see below)
-        clock = lambda: now_fn() - t0 + skew
+        remaining = eng.steps_total - eng.steps_done
+        burst = burst_size(int(remaining[eng.active].min()),
+                           throttle=throttle, budget=budget)
+        if burst <= 0:
+            return 0
+        eng.dispatch(burst, eng.active)
+        return burst
 
-        while pending or queue or eng.n_active:
-            now = clock()
-            # open-loop arrivals: everything whose arrival time has passed
-            # joins the queue
-            while pending and pending[0].arrival <= now:
-                queue.append(pending.pop(0))
-            if not queue and not eng.n_active:
-                # fully idle with the next arrival in the future: fast-
-                # forward the clock to it instead of busy-waiting, so
-                # timestamps stay on the offered-load timeline (TTFT and
-                # latency remain >= 0)
-                skew += pending[0].arrival - now
+    def sample(self, metrics: ServeMetrics) -> None:
+        occ, util = sample_pools((self.pool,))
+        metrics.occupancy.append(occ)
+        metrics.utilization.append(util)
+
+    def scan(self, clock: Callable[[], float], metrics: ServeMetrics,
+             sink: TokenSink) -> None:
+        eng = self.engine
+        now = clock()
+        for s, req in enumerate(eng.slots):
+            if req is None:
                 continue
-            decision = self.batcher.admit(queue, eng.n_active, now)
-            metrics.n_dropped += len(decision.dropped)
-            for req in decision.admitted:
-                # greedy decoding with known lengths: completion is
-                # deterministic — the final sample lands after
-                # plen + gen - 1 active steps
-                eng.bind(req, steps_total=(req.prompt_len
-                                           + req.max_new_tokens - 1))
-                active_np[req.slot] = True
-
-            if eng.n_active == 0:
-                continue                 # nothing admissible (pool pressure)
-
-            # burst: dispatch steps to the next completion boundary without
-            # any host sync; the device chain pipelines behind dispatch
-            remaining = eng.steps_total - eng.steps_done
-            burst = int(remaining[active_np].min())
-            if pending:
-                burst = min(burst, self.BURST_CAP_PENDING)
-            if max_steps is not None:
-                burst = min(burst, max_steps - metrics.n_steps)
-            eng.dispatch(burst, active_np)
-            metrics.n_steps += burst
-            metrics.occupancy.append(self.pool.occupancy())
-            metrics.utilization.append(self.pool.utilization())
-
-            now = clock()
-            for s, req in enumerate(eng.slots):
-                if req is None:
-                    continue
-                req.n_fed = int(eng.steps_done[s])
-                if (req.state is RequestState.PREFILL
-                        and req.n_fed >= req.prompt_len):
-                    # first sample landed inside this burst (dispatch-time
-                    # stamp; completion below syncs the chain)
-                    req.state = RequestState.DECODE
-                    req.t_first_token = now
-                if eng.steps_done[s] >= eng.steps_total[s]:
-                    # completion boundary: sync and pull this slot's tokens
-                    row = eng.pull_output(s)
-                    req.output = row[:req.max_new_tokens].tolist()
-                    req.state = RequestState.DONE
-                    req.t_done = clock()
-                    eng.release(req)
-                    active_np[s] = False
-                    metrics.observe(req)
-            if max_steps is not None and metrics.n_steps >= max_steps:
-                break
-        metrics.elapsed_s = clock()
-        return metrics
+            req.n_fed = int(eng.steps_done[s])
+            if (req.state is RequestState.PREFILL
+                    and req.n_fed >= req.prompt_len):
+                # the burst containing the first sample has been dispatched
+                # (host-visible stamping happens in the sink)
+                req.state = RequestState.DECODE
+                req.t_first_dispatch = now
+        sink.drain(eng, clock)           # streaming: burst-boundary sync
+        for s, req in enumerate(eng.slots):
+            if req is None:
+                continue
+            if eng.steps_done[s] >= eng.steps_total[s]:
+                # completion boundary: sync and pull this slot's tokens
+                row = eng.pull_output(s)
+                req.state = RequestState.DONE
+                req.t_done = clock()
+                sink.finish(req, row[:req.max_new_tokens], req.t_done)
+                eng.release(req)
+                metrics.observe(req)

@@ -112,14 +112,18 @@ class KVPool:
         return self._leases[rid]
 
     # ---- accounting ------------------------------------------------------
+    @property
+    def written_tokens(self) -> int:
+        """KV entries written across all live leases."""
+        return sum(l.written_tokens for l in self._leases.values())
+
     def utilization(self) -> float:
         """Written tokens / capacity of allocated blocks (1 - internal
         fragmentation of partially-filled blocks + unreached reservation)."""
         alloc_tokens = self.allocated_block_count * self.block_size
         if alloc_tokens == 0:
             return 0.0
-        written = sum(l.written_tokens for l in self._leases.values())
-        return written / alloc_tokens
+        return self.written_tokens / alloc_tokens
 
     def occupancy(self) -> float:
         """Allocated blocks / total blocks (pool pressure for admission)."""

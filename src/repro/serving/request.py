@@ -39,10 +39,17 @@ class Request:
 
     state: RequestState = RequestState.QUEUED
     slot: Optional[int] = None
-    n_fed: int = 0                      # prompt tokens consumed so far
+    n_fed: int = 0                      # engine steps fed so far (all phases)
+    n_streamed: int = 0                 # samples already delivered as deltas
     output: List[int] = dataclasses.field(default_factory=list)
     t_admitted: Optional[float] = None
+    # host-visible first token (burst-boundary sync under streaming, the
+    # completion pull otherwise) — what TTFT honestly measures
     t_first_token: Optional[float] = None
+    # dispatch-time stamp: the burst containing the first sample has been
+    # enqueued on the device (the pre-streaming TTFT; kept so the bench can
+    # quantify the dispatch-vs-delivery gap)
+    t_first_dispatch: Optional[float] = None
     t_done: Optional[float] = None
 
     @property
@@ -54,12 +61,30 @@ class Request:
         """Full KV footprint the request will ever need (reservation unit)."""
         return self.prompt_len + self.max_new_tokens
 
+    @property
+    def samples_ready(self) -> int:
+        """Samples present in the slot's output row after ``n_fed`` engine
+        steps: the step fed at position p writes sample p - prompt_len + 1
+        (valid once the final prompt token has been fed), so ``n_fed`` steps
+        leave ``n_fed - prompt_len + 1`` samples, clamped to the request's
+        generation length.  Engine-independent: ``n_fed`` counts steps
+        across phases, so the formula holds colocated and disaggregated."""
+        return min(max(self.n_fed - self.prompt_len + 1, 0),
+                   self.max_new_tokens)
+
     # ---- metrics ---------------------------------------------------------
     @property
     def ttft(self) -> Optional[float]:
         if self.t_first_token is None:
             return None
         return self.t_first_token - self.arrival
+
+    @property
+    def ttft_dispatch(self) -> Optional[float]:
+        """Dispatch-stamped TTFT (the old metric); <= ttft always."""
+        if self.t_first_dispatch is None:
+            return None
+        return self.t_first_dispatch - self.arrival
 
     @property
     def tpot(self) -> Optional[float]:

@@ -1,0 +1,326 @@
+"""Unified open-loop driver + streaming output channel.
+
+The contracts this file pins:
+  * colocated and disaggregated loops run the SAME driver scaffolding and
+    produce bit-identical per-request outputs;
+  * streaming (burst-boundary delta emission) does not perturb scheduling —
+    outputs, step counts and admission accounting match the completion-pull
+    run exactly, and the deltas concatenate to exactly the completion rows;
+  * TTFT is honest: ``t_first_token`` is stamped at host visibility, the
+    old dispatch-time stamp survives as ``ttft_dispatch``, and
+    ``ttft_dispatch <= ttft`` for every observed request;
+  * disaggregated pool metrics are capacity-weighted, slot migration
+    preserves every cache key (including per-slot cross-attention rows),
+    and the batcher's deferred-rid set stays bounded by the live queue.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import transformer as T
+from repro.serving import (ContinuousBatcher, DisaggregatedEngineLoop,
+                           EngineLoop, KVPool, Request, SlotEngine,
+                           sample_pools, synthetic_workload)
+
+TINY = T.ModelConfig(
+    name="driver-tiny", n_layers=3, d_model=32, n_heads=4, n_kv_heads=2,
+    d_ff=64, vocab=64, attention_impl="dot", remat=False)
+
+CROSS = T.ModelConfig(
+    name="driver-xattn", n_layers=4, d_model=32, n_heads=4, n_kv_heads=2,
+    d_ff=64, vocab=64, cross_attn_every=2, frontend="vision", img_seq=4,
+    attention_impl="dot", remat=False)
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return T.init_params(jax.random.PRNGKey(0), TINY)
+
+
+def _virtual_clock():
+    t = [0.0]
+
+    def now():
+        t[0] += 1e-3
+        return t[0]
+
+    return now
+
+
+def _workload(n=9, seed=11, gen_lens=(1, 3, 6, 12)):
+    return synthetic_workload(n, rate=1e9, vocab=TINY.vocab,
+                              prompt_lens=(4, 8), gen_lens=gen_lens,
+                              seed=seed)
+
+
+def _collector():
+    deltas, events = {}, []
+
+    def on_delta(d):
+        deltas.setdefault(d.rid, []).extend(d.tokens)
+        events.append(d)
+
+    return deltas, events, on_delta
+
+
+MAX_LEN = 8 + 12
+
+
+# ------------------------------------------- streaming == completion pull
+def test_streaming_does_not_perturb_scheduling(tiny_params):
+    """Outputs, step counts and admission accounting are identical with and
+    without the burst-boundary sync — streaming only changes delivery."""
+    comp_reqs, strm_reqs = _workload(), _workload()
+    comp = EngineLoop(TINY, tiny_params, n_slots=3, max_seq=MAX_LEN)
+    m_comp = comp.run(comp_reqs, now_fn=_virtual_clock())
+    strm = EngineLoop(TINY, tiny_params, n_slots=3, max_seq=MAX_LEN)
+    deltas, events, on_delta = _collector()
+    m_strm = strm.run(strm_reqs, now_fn=_virtual_clock(), on_delta=on_delta)
+
+    want = {r.rid: r.output for r in comp_reqs}
+    assert {r.rid: r.output for r in strm_reqs} == want
+    assert m_strm.n_steps == m_comp.n_steps
+    assert m_strm.n_done == m_comp.n_done == 9
+    assert m_strm.n_dropped == m_comp.n_dropped == 0
+    assert strm.batcher.n_admitted == comp.batcher.n_admitted
+    assert strm.batcher.n_deferred == comp.batcher.n_deferred
+    # the deltas concatenate to exactly the completion-pull rows
+    assert deltas == want
+    # every output token was delivered incrementally, and every request
+    # got a final done-marked delta
+    assert m_strm.tokens_streamed == m_strm.tokens_out
+    assert sum(d.done for d in events) == 9
+    # completion-pull run streams nothing
+    assert m_comp.tokens_streamed == 0 and m_comp.n_stream_deltas == 0
+
+
+def test_streaming_disaggregated_matches_colocated_completion(tiny_params):
+    """The driver contract across both loops: streamed disaggregated
+    outputs == completion-pull colocated outputs, token for token."""
+    colo_reqs, dis_reqs = _workload(), _workload()
+    colo = EngineLoop(TINY, tiny_params, n_slots=3, max_seq=MAX_LEN)
+    colo.run(colo_reqs, now_fn=_virtual_clock())
+    want = {r.rid: r.output for r in colo_reqs}
+
+    dis = DisaggregatedEngineLoop(TINY, tiny_params, n_prefill_slots=2,
+                                  n_decode_slots=3, max_seq=MAX_LEN)
+    deltas, events, on_delta = _collector()
+    m = dis.run(dis_reqs, now_fn=_virtual_clock(), on_delta=on_delta)
+    assert m.n_done == 9
+    assert {r.rid: r.output for r in dis_reqs} == want
+    assert deltas == want
+    assert m.tokens_streamed == m.tokens_out
+    assert sum(d.done for d in events) == 9
+    for r in dis_reqs:
+        assert r.n_streamed == r.max_new_tokens
+
+
+def test_ttft_is_host_visible_and_dispatch_stamp_precedes(tiny_params):
+    for streaming in (False, True):
+        reqs = _workload()
+        engine = EngineLoop(TINY, tiny_params, n_slots=3, max_seq=MAX_LEN)
+        on_delta = (lambda d: None) if streaming else None
+        engine.run(reqs, now_fn=_virtual_clock(), on_delta=on_delta)
+        for r in reqs:
+            assert r.ttft is not None and r.ttft_dispatch is not None
+            assert r.ttft_dispatch <= r.ttft, (streaming, r.rid)
+        if streaming:
+            # burst-boundary delivery: multi-token requests see their first
+            # token strictly before completion
+            assert any(r.t_first_token < r.t_done for r in reqs
+                       if r.max_new_tokens > 1)
+        else:
+            # completion pull: the first token becomes host-visible with
+            # the last, so honest TTFT == request latency
+            assert all(r.t_first_token == r.t_done for r in reqs)
+
+
+def test_ttft_dispatch_precedes_ttft_disaggregated(tiny_params):
+    reqs = _workload()
+    dis = DisaggregatedEngineLoop(TINY, tiny_params, n_prefill_slots=2,
+                                  n_decode_slots=3, max_seq=MAX_LEN)
+    m = dis.run(reqs, now_fn=_virtual_clock(), on_delta=lambda d: None)
+    assert m.n_done == 9
+    for r in reqs:
+        assert r.ttft_dispatch is not None and r.ttft_dispatch <= r.ttft
+    assert len(m.ttft_dispatch_s) == len(m.ttft_s) == 9
+    s = m.summary()
+    assert s["ttft_dispatch_p50_s"] <= s["ttft_p50_s"]
+    assert s["tokens_streamed"] == s["tokens_out"]
+
+
+def test_streaming_metrics_summary_keys(tiny_params):
+    reqs = _workload(n=3, gen_lens=(4,))
+    engine = EngineLoop(TINY, tiny_params, n_slots=2, max_seq=MAX_LEN)
+    m = engine.run(reqs, now_fn=_virtual_clock(), on_delta=lambda d: None)
+    s = m.summary()
+    for k in ("tokens_streamed", "stream_deltas", "ttft_dispatch_p50_s",
+              "ttft_dispatch_p99_s"):
+        assert k in s
+    assert s["stream_deltas"] == m.n_stream_deltas > 0
+
+
+# ------------------------------------------------- weighted pool metrics
+def test_sample_pools_weights_by_capacity():
+    a = KVPool(n_slots=2, max_seq=32, block_size=16)      # 4 blocks total
+    b = KVPool(n_slots=4, max_seq=64, block_size=16)      # 16 blocks total
+    a.alloc(1, 32)                                        # 2 blocks
+    a.note_write(1, 16)
+    b.alloc(2, 48)                                        # 3 blocks
+    b.note_write(2, 6)
+    occ, util = sample_pools((a, b))
+    # occupancy weighted by total_blocks: (2 + 3) / (4 + 16)
+    assert occ == pytest.approx(5 / 20)
+    # utilization weighted by allocated-block capacity: (16 + 6) / (32 + 48)
+    assert util == pytest.approx(22 / 80)
+    # the unweighted means the old loop reported are different numbers
+    assert occ != pytest.approx((a.occupancy() + b.occupancy()) / 2)
+    assert util != pytest.approx((a.utilization() + b.utilization()) / 2)
+    # one pool degenerates to the pool's own accounting
+    assert sample_pools((a,)) == (a.occupancy(), a.utilization())
+
+
+def test_disaggregated_loop_samples_weighted_pools(tiny_params):
+    from repro.serving import ServeMetrics
+    dis = DisaggregatedEngineLoop(TINY, tiny_params, n_prefill_slots=1,
+                                  n_decode_slots=4, max_seq=16)
+    dis.prefill.pool.alloc(0, 16)
+    dis.prefill.pool.note_write(0, 8)
+    dis.decode.pool.alloc(1, 8)
+    m = ServeMetrics()
+    dis.sample(m)
+    occ, util = sample_pools((dis.prefill.pool, dis.decode.pool))
+    assert m.occupancy == [occ] and m.utilization == [util]
+    dis.prefill.pool.free(0)
+    dis.decode.pool.free(1)
+
+
+# ------------------------------------------------- slot migration fixes
+def test_import_slot_preserves_unknown_cache_keys():
+    # regression: import_slot used to rebuild the cache as a literal
+    # {"layers", "pos", "cross"} dict, silently dropping any other key
+    # init_slot_cache (or a future model) carries
+    pool_a = KVPool(n_slots=2, max_seq=8)
+    pool_b = KVPool(n_slots=2, max_seq=8)
+    src = SlotEngine(TINY, None, pool_a)
+    dst = SlotEngine(TINY, None, pool_b)
+    dst.cache["extra"] = jnp.arange(3)
+    state = src.export_slot(0)
+    dst.import_slot(1, state)
+    assert "extra" in dst.cache
+    assert np.array_equal(np.asarray(dst.cache["extra"]), [0, 1, 2])
+
+
+def test_export_import_migrates_cross_rows():
+    # regression: per-slot cross-attention state was shared (the importing
+    # engine kept its own rows) rather than migrated with the slot
+    pool_a = KVPool(n_slots=2, max_seq=8)
+    pool_b = KVPool(n_slots=3, max_seq=8)
+    src = SlotEngine(CROSS, None, pool_a)
+    dst = SlotEngine(CROSS, None, pool_b)
+    assert src.cache["cross"] is not None
+    src.cache["cross"] = src.cache["cross"].at[1].set(7.0)
+    state = src.export_slot(1)
+    assert state["cross"] is not None
+    dst.import_slot(0, state)
+    got = np.asarray(dst.cache["cross"])
+    assert np.all(got[0] == 7.0)                  # migrated row installed
+    assert np.all(got[1:] == 0.0)                 # other slots untouched
+    # hand-off payload accounting covers the cross row
+    assert SlotEngine.state_nbytes(state) > SlotEngine.state_nbytes(
+        {k: v for k, v in state.items() if k != "cross"})
+
+
+def test_import_slot_rejects_cross_config_mismatch_both_ways():
+    pool = KVPool(n_slots=2, max_seq=8)
+    src = SlotEngine(CROSS, None, pool)
+    state = src.export_slot(0)
+    state["cross"] = None
+    dst = SlotEngine(CROSS, None, KVPool(n_slots=2, max_seq=8))
+    with pytest.raises(ValueError, match="cross"):
+        dst.import_slot(0, state)
+    # inverse direction: a cross row must not be silently discarded by an
+    # engine whose cache has no cross entry
+    state2 = src.export_slot(0)
+    assert state2["cross"] is not None
+    plain = SlotEngine(TINY, None, KVPool(n_slots=2, max_seq=8))
+    # the guard fires before any layer-tree op, so the mismatch surfaces
+    # as this error rather than a tree-structure traceback
+    with pytest.raises(ValueError, match="cross"):
+        plain.import_slot(0, state2)
+
+
+def test_disaggregated_cross_config_bit_identical_to_colocated():
+    # end-to-end regression for the cross-cache migration: a
+    # cross_attn_every > 0 config crosses the phase boundary and still
+    # matches colocated outputs token for token
+    params = T.init_params(jax.random.PRNGKey(1), CROSS)
+    reqs_c = synthetic_workload(4, rate=1e9, vocab=CROSS.vocab,
+                                prompt_lens=(4,), gen_lens=(4,), seed=3)
+    reqs_d = synthetic_workload(4, rate=1e9, vocab=CROSS.vocab,
+                                prompt_lens=(4,), gen_lens=(4,), seed=3)
+    colo = EngineLoop(CROSS, params, n_slots=2, max_seq=8)
+    colo.run(reqs_c, now_fn=_virtual_clock())
+    dis = DisaggregatedEngineLoop(CROSS, params, n_prefill_slots=1,
+                                  n_decode_slots=2, max_seq=8)
+    m = dis.run(reqs_d, now_fn=_virtual_clock())
+    assert m.n_done == 4
+    assert {r.rid: r.output for r in reqs_c} == \
+        {r.rid: r.output for r in reqs_d}
+
+
+# ------------------------------------------------- bounded deferred set
+def test_deferred_set_bounded_and_counter_monotone():
+    pool = KVPool(n_slots=4, max_seq=32)
+    b = ContinuousBatcher(TINY, pool, token_budget=1)
+    queue = [Request(rid=i, prompt=np.zeros((4,), np.int32),
+                     max_new_tokens=4) for i in range(4)]
+    b.admit(queue, n_active=0, now=0.0)          # admits rid 0, defers 1-3
+    assert b.n_deferred == 3
+    assert len(b._deferred_rids) == len(queue) == 3
+    b.admit(queue, n_active=0, now=0.0)          # admits rid 1, defers 2-3
+    assert b.n_deferred == 3                     # monotone: no recount
+    # admitted rids leave the set: bounded by the live queue, not by the
+    # total requests the server has ever seen
+    assert len(b._deferred_rids) == len(queue) == 2
+    while queue:
+        b.admit(queue, n_active=0, now=0.0)
+    assert not b._deferred_rids                  # drained queue, empty set
+    assert b.n_deferred == 3                     # history preserved
+
+
+def test_deferred_set_drops_dropped_and_shed_requests():
+    pool = KVPool(n_slots=2, max_seq=32)
+    b = ContinuousBatcher(TINY, pool, token_budget=1)
+    q = [Request(rid=0, prompt=np.zeros((4,), np.int32), max_new_tokens=4),
+         Request(rid=1, prompt=np.zeros((4,), np.int32), max_new_tokens=4,
+                 deadline=1.0)]
+    b.admit(q, n_active=1, now=0.0)              # budget full: both defer
+    assert b.n_deferred == 2 and len(b._deferred_rids) == 2
+    b.admit(q, n_active=0, now=5.0)              # rid 1 expired -> dropped
+    assert len(b._deferred_rids) == 0            # admitted + dropped leave
+    assert b.n_deferred == 2
+    # out-of-band shedding (the disaggregated loop's pre-admission check)
+    b2 = ContinuousBatcher(TINY, pool, token_budget=1)
+    q2 = [Request(rid=7, prompt=np.zeros((20,), np.int32),
+                  max_new_tokens=8),
+          Request(rid=8, prompt=np.zeros((4,), np.int32), max_new_tokens=4)]
+    b2.admit(q2, n_active=1, now=0.0)
+    assert 7 in b2._deferred_rids
+    b2.note_resolved(7)                          # shed outside admit()
+    assert 7 not in b2._deferred_rids
+    assert b2.n_deferred == 2
+
+
+def test_disaggregated_shed_does_not_leak_deferred_rids(tiny_params):
+    # a request too big for the decode pool defers once (budget pressure)
+    # then gets shed before admission: its rid must leave the batcher's set
+    big = Request(rid=0, prompt=np.zeros((30,), np.int32), max_new_tokens=8)
+    ok = [Request(rid=1 + i, prompt=np.arange(4, dtype=np.int32),
+                  max_new_tokens=4) for i in range(3)]
+    dis = DisaggregatedEngineLoop(TINY, tiny_params, n_prefill_slots=1,
+                                  n_decode_slots=2, max_seq=16)
+    m = dis.run([big] + ok, now_fn=_virtual_clock())
+    assert m.n_done == 3 and m.n_dropped == 1
+    assert not dis.prefill_batcher._deferred_rids

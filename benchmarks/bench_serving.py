@@ -6,11 +6,17 @@ Offers the same open-loop mixed-length workload (repro.serving.request) to
 both paths and writes ``BENCH_serving.json``: throughput (tok/s, req/s),
 TTFT/latency percentiles and the continuous/static speedup per offered
 load, plus a per-request bit-identity check of the greedy outputs (the two
-paths run the same decode math, so tokens must match exactly).  The
-``streaming`` section compares incremental (burst-boundary) token delivery
-against the completion pull in both colocated and disaggregated modes —
-streamed deltas must concatenate to exactly the completion rows, and the
-honest (host-visible) TTFT is reported next to the old dispatch-time stamp.
+paths run the same decode math, so tokens must match exactly — the
+continuous engine runs the default block-paged KV layout, so every load's
+check also gates paged-vs-dense numerics).  The ``paged`` section
+quantifies the layout itself: KV bytes resident paged vs dense at equal
+slots, the slot count a paged pool fits in the dense byte budget, the
+saturation-throughput cost of the page gather, and paged/dense
+bit-identity in colocated and disaggregated modes.  The ``streaming``
+section compares incremental (burst-boundary) token delivery against the
+completion pull in both colocated and disaggregated modes — streamed
+deltas must concatenate to exactly the completion rows, and the honest
+(host-visible) TTFT is reported next to the old dispatch-time stamp.
 
 Static batching groups requests by prompt length (the legacy server is
 rectangular), waits for a full batch to arrive, and decodes every batch to
@@ -101,6 +107,111 @@ def run_continuous(cfg, params, requests, *, slots: int, max_len: int
     engine = EngineLoop(cfg, params, n_slots=slots, max_seq=max_len)
     engine.warmup()                      # compile all burst buckets
     return engine.run(requests)
+
+
+def kv_cache_bytes(cfg, n_slots: int, max_len: int, *, layout: str,
+                   block_size: int = 16, total_blocks=None) -> int:
+    """Resident attention-KV bytes of a slot cache under `layout`, computed
+    from cache leaf shapes via eval_shape (nothing is allocated).  Counts
+    only the attention K/V storage — the axis the paged layout changes;
+    the paged figure includes its trash page (it is resident too)."""
+    if layout == "paged":
+        shapes = jax.eval_shape(
+            lambda: T.init_slot_cache_paged(cfg, n_slots, max_len,
+                                            block_size=block_size,
+                                            total_blocks=total_blocks))
+    else:
+        shapes = jax.eval_shape(
+            lambda: T.init_slot_cache(cfg, n_slots, max_len))
+    blocks, rem = shapes["layers"]
+    total = 0
+    for c in list(blocks) + list(rem):
+        if isinstance(c, dict) and "k" in c:
+            for leaf in jax.tree.leaves(c):
+                total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+    return total
+
+
+def run_paged(cfg, params, baselines: Dict, *, n_requests: int, slots: int,
+              max_len: int, seed: int, block_size: int = 16) -> Dict:
+    """Paged vs dense KV layout on the saturation workload.
+
+    The paged pool is provisioned for tokens-in-flight (mean per-request
+    block footprint x slots) instead of the ``slots x max_seq`` dense
+    worst case, so the section reports the KV bytes actually resident at
+    equal ``n_slots``, the slot count a paged pool could host inside the
+    dense byte budget, and the saturation-throughput cost of the page
+    gather.  Correctness contract: per-request greedy outputs are
+    bit-identical between the layouts in both colocated and disaggregated
+    modes (``baselines`` supplies :func:`run_disaggregation`'s paged runs,
+    reused so those serving runs + warmup compiles aren't paid twice)."""
+    bps = -(-max_len // block_size)
+    dense_reqs = _workload(n_requests, 1e9, cfg.vocab, seed)
+    # provision the paged arena for tokens-in-flight: the workload's mean
+    # per-request block footprint x slots (deterministic generator, so
+    # dense_reqs is the same draw every layout serves)
+    mean_blocks = float(np.mean([-(-r.total_tokens // block_size)
+                                 for r in dense_reqs]))
+    provisioned = max(int(np.ceil(mean_blocks * slots)), bps)
+    dense_eng = EngineLoop(cfg, params, n_slots=slots, max_seq=max_len,
+                           block_size=block_size, kv_layout="dense")
+    dense_eng.warmup()
+    m_dense = dense_eng.run(dense_reqs)
+
+    paged_reqs = _workload(n_requests, 1e9, cfg.vocab, seed)
+    paged_eng = EngineLoop(cfg, params, n_slots=slots, max_seq=max_len,
+                           block_size=block_size, kv_layout="paged",
+                           total_blocks=provisioned)
+    paged_eng.warmup()
+    m_paged = paged_eng.run(paged_reqs)
+
+    ddense_reqs = _workload(n_requests, 1e9, cfg.vocab, seed)
+    ddense = DisaggregatedEngineLoop(
+        cfg, params, n_prefill_slots=max(slots // 2, 1),
+        n_decode_slots=slots, max_seq=max_len, block_size=block_size,
+        kv_layout="dense")
+    ddense.warmup()
+    ddense.run(ddense_reqs)
+    _, dpaged_reqs = baselines["disaggregated"]   # paged (default layout)
+
+    out_d = {r.rid: r.output for r in dense_reqs}
+    out_p = {r.rid: r.output for r in paged_reqs}
+    out_dd = {r.rid: r.output for r in ddense_reqs}
+    out_dp = {r.rid: r.output for r in dpaged_reqs}
+
+    bytes_dense = kv_cache_bytes(cfg, slots, max_len, layout="dense")
+    bytes_paged = kv_cache_bytes(cfg, slots, max_len, layout="paged",
+                                 block_size=block_size,
+                                 total_blocks=provisioned)
+    d, p = m_dense.summary(), m_paged.summary()
+    section = {
+        "block_size": block_size,
+        "blocks_per_slot": bps,
+        "total_blocks": provisioned,
+        "dense_equiv_blocks": slots * bps,
+        "kv_bytes_dense": bytes_dense,
+        "kv_bytes_paged": bytes_paged,
+        "kv_bytes_ratio": bytes_paged / bytes_dense,
+        # slots a paged pool of this per-slot footprint fits in the dense
+        # byte budget (the capacity headroom paging buys at equal memory)
+        "achievable_n_slots_at_dense_budget": int(
+            bytes_dense // max(bytes_paged / slots, 1)),
+        "dense": d,
+        "paged": p,
+        "tok_per_s_ratio": p["tok_per_s"] / d["tok_per_s"],
+        "bit_identical_colocated": out_d == out_p,
+        "bit_identical_disaggregated": out_dd == out_dp,
+    }
+    section["all_identical"] = (section["bit_identical_colocated"]
+                                and section["bit_identical_disaggregated"])
+    print(f"[bench_serving] paged: {bytes_paged} KV bytes resident vs "
+          f"{bytes_dense} dense ({section['kv_bytes_ratio']:.2f}x, "
+          f"{section['achievable_n_slots_at_dense_budget']} slots at the "
+          f"dense budget); saturation {p['tok_per_s']:.1f} vs "
+          f"{d['tok_per_s']:.1f} tok/s "
+          f"({section['tok_per_s_ratio']:.2f}x); "
+          f"bit_identical={section['all_identical']}", flush=True)
+    return section
 
 
 def run_disaggregation(cfg, params, *, n_requests: int, slots: int,
@@ -268,6 +379,9 @@ def run_bench(*, n_requests: int, slots: int, rates: List[float],
     results["disaggregation"], baselines = run_disaggregation(
         cfg, params, n_requests=n_requests, slots=slots, max_len=max_len,
         seed=seed)
+    results["paged"] = run_paged(
+        cfg, params, baselines, n_requests=n_requests, slots=slots,
+        max_len=max_len, seed=seed)
     results["streaming"] = run_streaming(
         cfg, params, baselines, n_requests=n_requests, slots=slots,
         max_len=max_len, seed=seed)
@@ -276,6 +390,7 @@ def run_bench(*, n_requests: int, slots: int, rates: List[float],
     results["all_bit_identical"] = all(
         [l["bit_identical"] for l in results["loads"]]
         + [results["disaggregation"]["bit_identical"],
+           results["paged"]["all_identical"],
            results["streaming"]["all_identical"]])
     return results
 

@@ -8,23 +8,62 @@ on throughput at saturation.  Raw tok/s is not comparable across hosts
 (the committed baseline and a CI runner are different machines), so the
 default gate compares the *continuous-over-static speedup* at the highest
 offered rate — both paths run on the same host in the same process, so
-their ratio is a machine-normalized throughput measure.  ``--absolute``
-additionally gates raw tok/s for same-host comparisons.
+their ratio is a machine-normalized throughput measure.
+
+``--absolute`` additionally gates raw tok/s against a *per-host recorded
+baseline*: ``benchmarks/baselines/<host-key>.json``, keyed like the
+profiling cache (jax version + backend) plus the platform triple and the
+visible hardware (CPU model digest + core count), so a baseline recorded
+on one machine never gates a different one — unlike-keyed hosts record
+their own floors.  The first run on a
+host records the baseline (``--record-absolute``); later runs on the same
+host must stay within the threshold of it.  CI persists the baselines
+directory across runs with ``actions/cache`` so ephemeral runners gate
+against their own image's history.
 
 Correctness gates always apply: every load's continuous outputs must be
 bit-identical to static, the disaggregated run's outputs must be
-bit-identical to colocated, and the ``streaming`` section must be present
-and well-formed — streamed outputs bit-identical to the completion pull,
-deltas concatenating to exactly the completion rows, and
-``ttft_dispatch <= ttft`` — so a malformed BENCH_serving.json fails the
+bit-identical to colocated, the ``paged`` section must be present and
+well-formed — paged outputs bit-identical to dense in colocated and
+disaggregated modes and ``kv_bytes_paged`` strictly below
+``kv_bytes_dense`` at equal slots — and the ``streaming`` section must be
+present and well-formed (streamed outputs bit-identical to the completion
+pull, deltas concatenating to exactly the completion rows,
+``ttft_dispatch <= ttft``) — so a malformed BENCH_serving.json fails the
 gate instead of slipping through.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import platform
 import sys
 from typing import List, Tuple
+
+DEFAULT_BASELINES_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+
+
+def host_key() -> str:
+    """Stable identifier for 'the machine + numeric environment this bench
+    ran on': platform triple + visible hardware (CPU model where the OS
+    reports one, core count) + python + the profiling cache's environment
+    key (jax version, backend).  Absolute tok/s is only comparable within
+    one such key — different hardware hashes to a different key and
+    records its own baseline instead of being gated by another machine's
+    floor."""
+    import hashlib
+
+    import jax
+
+    cpu = platform.processor() or platform.machine()
+    hw = hashlib.sha256(cpu.encode()).hexdigest()[:8]
+    return "-".join([
+        platform.system().lower(), platform.machine(),
+        f"cpu{os.cpu_count()}x{hw}",
+        f"py{sys.version_info[0]}.{sys.version_info[1]}",
+        f"jax{jax.__version__}", jax.default_backend(),
+    ])
 
 
 def saturation_load(results: dict) -> dict:
@@ -38,6 +77,60 @@ _STREAMING_SUMMARY_KEYS = ("tok_per_s", "ttft_p50_s", "ttft_dispatch_p50_s",
                            "tokens_out")
 _STREAMING_BOOL_KEYS = ("bit_identical", "delta_concat_identical",
                         "ttft_dispatch_leq_ttft")
+
+
+# numeric fields the paged section must carry (bench run_paged keys) and
+# the per-layout summaries the throughput comparison reads
+_PAGED_NUMERIC_KEYS = ("block_size", "blocks_per_slot", "total_blocks",
+                       "dense_equiv_blocks", "kv_bytes_dense",
+                       "kv_bytes_paged", "kv_bytes_ratio",
+                       "achievable_n_slots_at_dense_budget",
+                       "tok_per_s_ratio")
+_PAGED_BOOL_KEYS = ("bit_identical_colocated", "bit_identical_disaggregated",
+                    "all_identical")
+
+
+def validate_paged(fresh: dict) -> List[Tuple[str, bool, str]]:
+    """Schema + correctness checks for the ``paged`` section: well-formed
+    summaries, paged-vs-dense bit-identity in both serving modes, and KV
+    bytes resident strictly below dense at equal slots."""
+    checks: List[Tuple[str, bool, str]] = []
+    section = fresh.get("paged")
+    if not isinstance(section, dict):
+        return [("paged section present", False,
+                 f"missing or not an object: {type(section).__name__}")]
+    problems: List[str] = []
+    for k in _PAGED_NUMERIC_KEYS:
+        if not isinstance(section.get(k), (int, float)):
+            problems.append(f"{k}: not a number")
+    for k in _PAGED_BOOL_KEYS:
+        if not isinstance(section.get(k), bool):
+            problems.append(f"{k}: not a bool")
+    for layout in ("dense", "paged"):
+        summ = section.get(layout)
+        if not isinstance(summ, dict):
+            problems.append(f"{layout}: missing summary")
+            continue
+        for k in ("tok_per_s", "tokens_out", "requests_done"):
+            if not isinstance(summ.get(k), (int, float)):
+                problems.append(f"{layout}.{k}: not a number")
+    checks.append(("paged section schema", not problems,
+                   "; ".join(problems) if problems else
+                   "layout summaries + memory accounting well-formed"))
+    if problems:
+        return checks
+    checks.append((
+        "paged outputs bit-identical to dense",
+        section["bit_identical_colocated"]
+        and section["bit_identical_disaggregated"],
+        ", ".join(f"{k}={section[k]}" for k in _PAGED_BOOL_KEYS[:2])))
+    checks.append((
+        "paged KV bytes resident strictly below dense",
+        section["kv_bytes_paged"] < section["kv_bytes_dense"],
+        f"paged {section['kv_bytes_paged']} vs dense "
+        f"{section['kv_bytes_dense']} bytes "
+        f"({section['kv_bytes_ratio']:.2f}x) at equal n_slots"))
+    return checks
 
 
 def validate_streaming(fresh: dict) -> List[Tuple[str, bool, str]]:
@@ -87,8 +180,57 @@ def validate_streaming(fresh: dict) -> List[Tuple[str, bool, str]]:
     return checks
 
 
+def absolute_baseline_metrics(fresh: dict) -> dict:
+    """The raw-throughput figures a host baseline records/gates."""
+    sat = saturation_load(fresh)
+    out = {"continuous_tok_per_s": sat["continuous"]["tok_per_s"]}
+    paged = fresh.get("paged")
+    if isinstance(paged, dict) and isinstance(paged.get("paged"), dict):
+        out["paged_tok_per_s"] = paged["paged"].get("tok_per_s")
+    return out
+
+
+def check_absolute(fresh: dict, *, threshold: float, baselines_dir: str,
+                   record: bool) -> List[Tuple[str, bool, str]]:
+    """Gate raw tok/s against this host's recorded baseline (recording it
+    first when absent and ``record`` is set — a host's first run defines
+    its floor, later runs must hold it)."""
+    key = host_key()
+    path = os.path.join(baselines_dir, f"{key}.json")
+    metrics = absolute_baseline_metrics(fresh)
+    if not os.path.exists(path):
+        if record:
+            os.makedirs(baselines_dir, exist_ok=True)
+            with open(path, "w") as f:
+                json.dump({"host_key": key, "metrics": metrics}, f, indent=2)
+            return [("absolute tok/s vs host baseline", True,
+                     f"no baseline for {key}; recorded {path}")]
+        return [("absolute tok/s vs host baseline", True,
+                 f"no baseline recorded for {key} "
+                 f"(run with --record-absolute to create one); skipped")]
+    with open(path) as f:
+        recorded = json.load(f)
+    checks: List[Tuple[str, bool, str]] = []
+    for name, base_v in recorded.get("metrics", {}).items():
+        fresh_v = metrics.get(name)
+        if not isinstance(base_v, (int, float)) or not isinstance(
+                fresh_v, (int, float)):
+            checks.append((f"absolute {name} vs host baseline", False,
+                           f"baseline {base_v!r} vs fresh {fresh_v!r}: "
+                           f"not comparable"))
+            continue
+        floor = base_v * (1.0 - threshold)
+        checks.append((
+            f"absolute {name} vs host baseline ({key})",
+            fresh_v >= floor,
+            f"fresh {fresh_v:.1f} vs recorded {base_v:.1f} "
+            f"(floor {floor:.1f} at {threshold:.0%} regression budget)"))
+    return checks
+
+
 def compare(baseline: dict, fresh: dict, *, threshold: float,
-            absolute: bool) -> List[Tuple[str, bool, str]]:
+            absolute: bool, baselines_dir: str = DEFAULT_BASELINES_DIR,
+            record_absolute: bool = False) -> List[Tuple[str, bool, str]]:
     """Returns [(check name, ok, detail), ...]."""
     checks: List[Tuple[str, bool, str]] = []
     base_l, fresh_l = saturation_load(baseline), saturation_load(fresh)
@@ -103,14 +245,9 @@ def compare(baseline: dict, fresh: dict, *, threshold: float,
         f"(floor {floor:.2f}x at {threshold:.0%} regression budget)"))
 
     if absolute:
-        base_t = base_l["continuous"]["tok_per_s"]
-        fresh_t = fresh_l["continuous"]["tok_per_s"]
-        floor_t = base_t * (1.0 - threshold)
-        checks.append((
-            "saturation continuous tok/s (same-host)",
-            fresh_t >= floor_t,
-            f"fresh {fresh_t:.1f} vs baseline {base_t:.1f} "
-            f"(floor {floor_t:.1f})"))
+        checks.extend(check_absolute(fresh, threshold=threshold,
+                                     baselines_dir=baselines_dir,
+                                     record=record_absolute))
 
     checks.append(("all loads bit-identical to static",
                    all(l["bit_identical"] for l in fresh["loads"]),
@@ -122,6 +259,7 @@ def compare(baseline: dict, fresh: dict, *, threshold: float,
                        bool(dis["bit_identical"]),
                        f"{dis['handoff']['n_handoffs']} handoffs, "
                        f"{dis['handoff']['bytes_moved']} bytes"))
+    checks.extend(validate_paged(fresh))
     checks.extend(validate_streaming(fresh))
     return checks
 
@@ -135,8 +273,14 @@ def main() -> None:
     ap.add_argument("--threshold", type=float, default=0.20,
                     help="allowed fractional regression (default 0.20)")
     ap.add_argument("--absolute", action="store_true",
-                    help="also gate raw tok/s (only meaningful when "
-                         "baseline and fresh ran on the same host)")
+                    help="also gate raw tok/s against this host's recorded "
+                         "baseline (benchmarks/baselines/<host-key>.json)")
+    ap.add_argument("--record-absolute", action="store_true",
+                    help="with --absolute: record this host's baseline "
+                         "when none exists yet (first run on a host "
+                         "defines its floor)")
+    ap.add_argument("--baselines-dir", default=DEFAULT_BASELINES_DIR,
+                    help="directory of per-host absolute baselines")
     args = ap.parse_args()
 
     with open(args.baseline) as f:
@@ -147,7 +291,9 @@ def main() -> None:
     failed = False
     for name, ok, detail in compare(baseline, fresh,
                                     threshold=args.threshold,
-                                    absolute=args.absolute):
+                                    absolute=args.absolute,
+                                    baselines_dir=args.baselines_dir,
+                                    record_absolute=args.record_absolute):
         print(f"[check_regression] {'PASS' if ok else 'FAIL'}: "
               f"{name} — {detail}")
         failed |= not ok

@@ -6,6 +6,11 @@ ships) became ``pltpu.CompilerParams`` (newer jaxlib).  The kernels go
 through :func:`tpu_compiler_params` so they run on either spelling instead
 of raising ``AttributeError`` at call time; if a future jaxlib drops both,
 they degrade to compiler defaults (``compiler_params=None``).
+
+The paged-attention decode kernel additionally needs scalar prefetch
+(``pltpu.PrefetchScalarGridSpec``) so the block table can drive BlockSpec
+index maps; :func:`prefetch_grid_spec` returns ``None`` on jaxlibs that
+predate it, and callers fall back to the pure-jnp reference gather.
 """
 from __future__ import annotations
 
@@ -16,4 +21,17 @@ def tpu_compiler_params(**kwargs):
     """Build the installed jaxlib's TPU compiler-params object (or None)."""
     cls = getattr(pltpu, "CompilerParams", None) or getattr(
         pltpu, "TPUCompilerParams", None)
+    return cls(**kwargs) if cls is not None else None
+
+
+def has_scalar_prefetch() -> bool:
+    """Whether this jaxlib ships the scalar-prefetch grid spec the paged
+    decode kernel is built on."""
+    return hasattr(pltpu, "PrefetchScalarGridSpec")
+
+
+def prefetch_grid_spec(**kwargs):
+    """Build a ``PrefetchScalarGridSpec`` (or None when the installed
+    jaxlib predates scalar prefetch — callers degrade to the jnp path)."""
+    cls = getattr(pltpu, "PrefetchScalarGridSpec", None)
     return cls(**kwargs) if cls is not None else None

@@ -16,10 +16,12 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .compat import has_scalar_prefetch
 from .conv2d import conv2d_pallas
 from .flash_attention import flash_attention_pallas
 from .lrn import lrn_pallas
 from .matmul import matmul_pallas
+from .paged_attention import paged_attention_pallas
 from .pooling import pool_pallas
 
 
@@ -111,6 +113,22 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     out = flash_attention_pallas(q, k, v, causal=causal, window=window,
                                  block_q=bq, block_k=bk, interpret=interpret)
     return out[:, :, :s, :]
+
+
+@functools.partial(jax.jit, static_argnames=("max_seq", "interpret"))
+def paged_attention(q: jax.Array, k_arena: jax.Array, v_arena: jax.Array,
+                    block_tables: jax.Array, pos: jax.Array, *,
+                    max_seq: Optional[int] = None,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Paged decode attention: q (B, HQ, 1, D) against block arenas
+    (TB, HK, BS, D) gathered through (B, NB) block tables.  Degrades to the
+    pure-jnp gather oracle on jaxlibs without scalar prefetch."""
+    interpret = default_interpret() if interpret is None else interpret
+    if not has_scalar_prefetch():
+        return ref.paged_attention_ref(q, k_arena, v_arena, block_tables,
+                                       pos, max_seq=max_seq)
+    return paged_attention_pallas(q, k_arena, v_arena, block_tables, pos,
+                                  interpret=interpret)
 
 
 # convenience: FC layer matching the paper's Eq. 1 (vector-matrix + f)

@@ -90,6 +90,47 @@ def lrn_ref(x: jax.Array, *, local_size: int = 5, alpha: float = 1e-4,
     return (x.astype(jnp.float32) / denom).astype(x.dtype)
 
 
+def paged_gather(arena: jax.Array, block_tables: jax.Array,
+                 max_seq: int) -> jax.Array:
+    """Materialize per-slot KV rows from a block arena.
+
+    arena: (total_blocks(+1), HK, BS, D) — fixed-size physical KV pages;
+    block_tables: (B, NB) int32 — slot-major logical->physical block map
+    (block j of a slot holds tokens [j*BS, (j+1)*BS)).  Returns
+    (B, HK, max_seq, D): the dense rows the block tables describe, trimmed
+    to ``max_seq`` (NB*BS may overhang when max_seq % BS != 0).  This is
+    the reference the Pallas kernel avoids — it gathers per block inside
+    the kernel instead of materializing these rows in HBM.
+    """
+    b, nb = block_tables.shape
+    hk, bs, d = arena.shape[1:]
+    rows = arena[block_tables]                      # (B, NB, HK, BS, D)
+    rows = rows.transpose(0, 2, 1, 3, 4).reshape(b, hk, nb * bs, d)
+    return rows[:, :, :max_seq]
+
+
+def paged_attention_ref(q: jax.Array, k_arena: jax.Array, v_arena: jax.Array,
+                        block_tables: jax.Array, pos: jax.Array, *,
+                        max_seq: Optional[int] = None) -> jax.Array:
+    """Reference paged decode attention (pure-jnp oracle for the Pallas
+    kernel in kernels/paged_attention.py).
+
+    q: (B, HQ, 1, D); arenas: (total_blocks(+1), HK, BS, D);
+    block_tables: (B, NB) int32; pos: (B,) absolute position of the
+    current token per slot (positions <= pos are attended).  Numerics
+    follow :func:`repro.models.attention.decode_attention` exactly — the
+    gather-then-attend composition is what keeps the serving engine's
+    paged path bit-identical to its dense path.
+    """
+    from ..models.attention import decode_attention
+
+    if max_seq is None:
+        max_seq = block_tables.shape[1] * k_arena.shape[2]
+    k = paged_gather(k_arena, block_tables, max_seq)
+    v = paged_gather(v_arena, block_tables, max_seq)
+    return decode_attention(q, k, v, pos=pos, window=None)
+
+
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = True, window: Optional[int] = None,
                   scale: Optional[float] = None) -> jax.Array:

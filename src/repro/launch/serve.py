@@ -7,6 +7,10 @@ static-batch server (``--static-batching``).
 Continuous path (repro.serving): an open-loop arrival stream feeds a
 slot-based KV pool; the batcher prices admission with core/cost_model.py and
 the jitted engine step interleaves prefill with the running decode batch.
+``--kv-layout paged`` (default) stores KV in fixed-size physical blocks
+gathered through per-slot block tables (vLLM-style paging; outputs stay
+bit-identical to ``--kv-layout dense``), so ``--total-blocks`` can
+provision the pool for tokens-in-flight instead of slots x max_seq.
 ``--placement auto`` additionally runs the phase-placement DSE
 (repro.serving.placement): prefill and decode are priced separately over
 the engine set and the serving loop disaggregates onto the winning pair
@@ -93,6 +97,18 @@ def main() -> None:
                          "continuous engine")
     ap.add_argument("--slots", type=int, default=8,
                     help="continuous path: KV pool slots")
+    ap.add_argument("--kv-layout", default="paged",
+                    choices=["dense", "paged"],
+                    help="continuous path: KV cache layout — paged stores "
+                         "KV in fixed-size physical blocks gathered "
+                         "through per-slot block tables (vLLM-style; "
+                         "outputs bit-identical to dense), dense keeps "
+                         "physically max_seq-long slot rows")
+    ap.add_argument("--total-blocks", type=int, default=None,
+                    help="paged layout: physical KV blocks to provision "
+                         "(default: the dense equivalent; smaller values "
+                         "provision for tokens-in-flight and admission "
+                         "defers when pages run out)")
     ap.add_argument("--rate", type=float, default=16.0,
                     help="continuous path: offered load (req/s)")
     ap.add_argument("--stream", action="store_true",
@@ -147,6 +163,13 @@ def main() -> None:
     assert cfg is not None and not cfg.encoder_decoder \
         and cfg.frontend == "none", "serve CLI supports decoder-only LMs"
     cfg = dataclasses.replace(cfg, scan_chunk=min(cfg.scan_chunk, 16))
+    if args.kv_layout == "paged" and cfg.attn_window is not None:
+        # the paged arena has no rolling-buffer mode yet (ROADMAP follow-on)
+        print(f"[serve] {args.arch} uses sliding-window attention "
+              f"(window={cfg.attn_window}); paged KV layout does not "
+              f"support rolling buffers yet — falling back to dense",
+              flush=True)
+        args.kv_layout = "dense"
 
     mesh = (make_host_mesh() if args.mesh == "host" else
             make_production_mesh(multi_pod=args.mesh == "multipod"))
@@ -265,6 +288,8 @@ def main() -> None:
         engine = DisaggregatedEngineLoop(
             cfg, params, n_prefill_slots=args.prefill_slots or args.slots,
             n_decode_slots=args.slots, max_seq=max_len,
+            kv_layout=args.kv_layout,
+            decode_total_blocks=args.total_blocks,
             prefill_device=_phase_device(pre_eng),
             decode_device=_phase_device(dec_eng), step_slo_s=step_slo_s)
         with mesh:
@@ -283,6 +308,7 @@ def main() -> None:
             device_model = _phase_device(pre_eng)
         engine = EngineLoop(
             cfg, params, n_slots=args.slots, max_seq=max_len,
+            kv_layout=args.kv_layout, total_blocks=args.total_blocks,
             device_name=args.device_model, device_model=device_model,
             step_slo_s=step_slo_s)
         with mesh:

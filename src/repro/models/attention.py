@@ -245,6 +245,35 @@ def decode_attention(q, k_cache, v_cache, *, pos: jax.Array,
     return out.reshape(b, hq, 1, d).astype(q.dtype)
 
 
+def paged_decode_attention(q, k_arena, v_arena, block_tables, pos, *,
+                           max_seq: int, impl: str = "ref") -> jax.Array:
+    """Single-token attention against a block-paged cache.
+
+    q: (B, HQ, 1, D); arenas: (total_blocks + 1, HK, BS, D) — fixed-size
+    physical KV pages plus a trailing trash page inactive slots write to;
+    block_tables: (B, NB) int32 logical->physical page map; pos: (B,)
+    per-slot absolute position of the current token.
+
+    ``impl="ref"`` gathers the slot rows through the table and runs
+    :func:`decode_attention` on them — bit-identical to the dense slot
+    cache by construction (the gathered row equals the dense row at every
+    attended position, and masked positions contribute exact zeros either
+    way), which is the serving engine's correctness contract on CPU.
+    ``impl="pallas"`` runs kernels/paged_attention.py, which gathers pages
+    inside the kernel (online softmax — allclose, not bit-identical).
+    """
+    if impl == "pallas":
+        out = kops.paged_attention(q, k_arena, v_arena, block_tables, pos,
+                                   max_seq=max_seq)
+        return out.astype(q.dtype)
+    if impl != "ref":
+        raise ValueError(f"unknown paged attention impl {impl!r}")
+    from ..kernels.ref import paged_gather
+    k = paged_gather(k_arena, block_tables, max_seq)
+    v = paged_gather(v_arena, block_tables, max_seq)
+    return decode_attention(q, k, v, pos=pos, window=None)
+
+
 ATTENTION_ENGINES = {
     "dot": dot_attention,
     "chunked": chunked_attention,

@@ -81,6 +81,10 @@ class ModelConfig:
     compute_dtype: Any = jnp.bfloat16
     attention_impl: str = "chunked"         # dot | chunked | pallas
     attn_chunk: int = 1024
+    # paged serving decode: "ref" (gather + dense decode attention; bit-
+    # identical to the dense slot cache — the CPU/CI default) or "pallas"
+    # (kernels/paged_attention.py, in-kernel page gather on TPU)
+    paged_attention_impl: str = "ref"
     remat: bool = True
     frontend: str = "none"                  # none | audio | vision
     img_seq: int = 6404                     # vision stub: 4 tiles x 1601
@@ -545,20 +549,35 @@ def _decode_block(btype, p, x, cache, cfg: ModelConfig, pos, cross_feats):
 
 
 def _decode_step_impl(params, cfg: ModelConfig, cache: Dict,
-                      tokens: jax.Array, active: Optional[jax.Array]):
+                      tokens: jax.Array, active: Optional[jax.Array], *,
+                      block_step=None, arena_passthrough: bool = False):
     """Shared decode-step body.  With ``active=None`` this is the static
     path (scalar `pos`, whole batch advances); with an (B,) ``active`` mask
     it is the continuous-batching path (per-slot (B,) `pos`, inactive slots
-    keep cache and position bit-for-bit)."""
+    keep cache and position bit-for-bit).
+
+    ``block_step(btype, p, h, c) -> (h, new_c)`` overrides the per-layer
+    step (the paged layout substitutes its attention block);
+    ``arena_passthrough`` exempts attention K/V dicts from the per-slot
+    keep-select — paged arenas are page-major, not slot-major, and their
+    writes are already active-guarded by trash-page routing.  There is
+    exactly one copy of everything else (embed, keep semantics, the
+    super-block scan, final norm, logits head), so a fix here cannot split
+    the layouts' bit-identity."""
     unit = cfg.pattern_unit()
     pos = cache["pos"]
     cross_feats = cache.get("cross")
     b = tokens.shape[0]
+    if block_step is None:
+        def block_step(btype, p, h, c):
+            return _decode_block(btype, p, h, c, cfg, pos, cross_feats)
 
     if active is None:
         keep = lambda new, old: new
     else:
         def keep(new, old):
+            if arena_passthrough and isinstance(new, dict) and "k" in new:
+                return new
             def sel(n, o):
                 if getattr(n, "ndim", 0) == 0 or n.shape[0] != b:
                     return n                # scannable placeholders (xattn)
@@ -575,8 +594,7 @@ def _decode_step_impl(params, cfg: ModelConfig, cache: Dict,
         ps, cs = xs
         new_cs = []
         for j, btype in enumerate(unit):
-            h, nc = _decode_block(btype, ps[j], h, cs[j], cfg, pos,
-                                  cross_feats)
+            h, nc = block_step(btype, ps[j], h, cs[j])
             h = _constrain_act(h, cfg)
             new_cs.append(keep(nc, cs[j]))
         return h, tuple(new_cs)
@@ -588,7 +606,7 @@ def _decode_step_impl(params, cfg: ModelConfig, cache: Dict,
     new_rem = []
     for i, p in enumerate(params["decoder"]["rem"]):
         btype = unit[i % len(unit)]
-        x, nc = _decode_block(btype, p, x, rem_cache[i], cfg, pos, cross_feats)
+        x, nc = block_step(btype, p, x, rem_cache[i])
         new_rem.append(keep(nc, rem_cache[i]))
 
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
@@ -596,9 +614,12 @@ def _decode_step_impl(params, cfg: ModelConfig, cache: Dict,
     if head is None:
         head = params["embed"].T
     logits = jnp.dot(x, head.astype(cfg.compute_dtype))
-    new_pos = pos + 1 if active is None else jnp.where(active, pos + 1, pos)
-    new_cache = {"layers": (new_blocks, tuple(new_rem)), "pos": new_pos,
-                 "cross": cross_feats}
+    # copy-and-update: layout-specific keys (e.g. paged block_tables)
+    # survive; the dense cache carries exactly layers/pos/cross either way
+    new_cache = dict(cache)
+    new_cache["layers"] = (new_blocks, tuple(new_rem))
+    new_cache["pos"] = (pos + 1 if active is None
+                        else jnp.where(active, pos + 1, pos))
     return logits, new_cache
 
 
@@ -620,9 +641,13 @@ def init_slot_cache(cfg: ModelConfig, n_slots: int, max_seq: int) -> Dict:
 def reset_slot_state(cfg: ModelConfig, cache: Dict, slot: int) -> Dict:
     """Clear one slot's per-request state before binding a new request.
 
-    Attention KV rows need no clearing (per-slot position masks hide stale
-    entries), but recurrent SSM states (rec/mamba) carry no position and
-    WOULD leak across tenants — those are zeroed, matching `init_cache`."""
+    Attention KV entries need no clearing in either layout (per-slot
+    position masks hide stale entries — paged arenas additionally never
+    alias live blocks), but recurrent SSM states (rec/mamba) carry no
+    position and WOULD leak across tenants — those are zeroed, matching
+    `init_cache`.  The cache is rebuilt by copy-and-update so every key
+    the layout carries (e.g. the paged layout's ``block_tables``)
+    survives."""
     def zero_slot(c, axis):
         if not (isinstance(c, dict) and ("rec" in c or "mamba" in c)):
             return c
@@ -634,9 +659,10 @@ def reset_slot_state(cfg: ModelConfig, cache: Dict, slot: int) -> Dict:
     blocks, rem = cache["layers"]
     blocks = tuple(zero_slot(c, 1) for c in blocks)     # (n_super, B, ...)
     rem = tuple(zero_slot(c, 0) for c in rem)           # (B, ...)
-    return {"layers": (blocks, rem),
-            "pos": cache["pos"].at[slot].set(0),
-            "cross": cache.get("cross")}
+    out = dict(cache)
+    out["layers"] = (blocks, rem)
+    out["pos"] = cache["pos"].at[slot].set(0)
+    return out
 
 
 def decode_step_slots(params, cfg: ModelConfig, cache: Dict,
@@ -653,6 +679,143 @@ def decode_step_slots(params, cfg: ModelConfig, cache: Dict,
     token-identical to the static replay path.
     """
     return _decode_step_impl(params, cfg, cache, tokens, active=active)
+
+
+# ----------------- block-paged slot decode (serving, paged layout) ----------
+def init_slot_cache_paged(cfg: ModelConfig, n_slots: int, max_seq: int, *,
+                          block_size: int = 16,
+                          total_blocks: Optional[int] = None) -> Dict:
+    """Physically block-paged cache for the continuous-batching engine.
+
+    Attention layers store K/V in one ``(total_blocks + 1, n_kv_heads,
+    block_size, head_dim)`` arena per layer/K-V instead of dense
+    ``(n_slots, heads, max_seq, head_dim)`` rows; a slot's sequence lives
+    in the physical pages its ``block_tables`` row names (block ``j``
+    holds positions ``[j * block_size, (j + 1) * block_size)``), so the
+    pool can be provisioned for tokens-in-flight rather than
+    ``n_slots x max_seq``.  The trailing arena page (index
+    ``total_blocks``) is the *trash page*: inactive slots' writes are
+    routed there, never read back (no block table names it).  Recurrent
+    SSM states and cross-attention rows stay slot-major (they are O(1) in
+    sequence length).  Layout is shared across layers — one table indexes
+    every layer's arena.
+
+    Sliding-window layers are not paged yet (the dense rolling buffer
+    reuses slots in place; paging it needs in-kernel modular gather) —
+    configs with ``attn_window`` must serve on the dense layout.
+    """
+    if cfg.attn_window is not None:
+        raise ValueError(
+            "paged KV layout does not support sliding-window attention "
+            "(rolling-buffer slots); serve this config with the dense "
+            "layout")
+    unit = cfg.pattern_unit()
+    blocks_per_slot = -(-max_seq // block_size)
+    if total_blocks is None:
+        total_blocks = n_slots * blocks_per_slot
+
+    def one(btype):
+        if btype in ("attn",):
+            arena = jnp.zeros((total_blocks + 1, cfg.n_kv_heads, block_size,
+                               cfg.hd), cfg.compute_dtype)
+            return {"k": arena, "v": arena}
+        if btype == "rec":
+            return {"rec": ssm_lib.rglru_init_state(cfg.rglru_args(),
+                                                    n_slots)}
+        if btype == "mamba":
+            return {"mamba": ssm_lib.mamba_init_state(cfg.mamba_args(),
+                                                      n_slots)}
+        if btype == "xattn":
+            return jnp.zeros((), jnp.int32)
+        raise ValueError(btype)
+
+    def stacked(btype):
+        c = one(btype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_super,) + a.shape), c)
+
+    blocks = tuple(stacked(b) for b in unit)
+    rem = tuple(one(unit[i % len(unit)]) for i in range(cfg.n_rem))
+    cross = None
+    if cfg.encoder_decoder:
+        cross = jnp.zeros((n_slots, max_seq, cfg.d_model), cfg.compute_dtype)
+    elif cfg.frontend == "vision":
+        cross = jnp.zeros((n_slots, cfg.img_seq, cfg.d_model),
+                          cfg.compute_dtype)
+    return {"layers": (blocks, rem),
+            "pos": jnp.zeros((n_slots,), jnp.int32),
+            "cross": cross,
+            "block_tables": jnp.zeros((n_slots, blocks_per_slot), jnp.int32)}
+
+
+def _decode_attn_block_paged(p, x, cache, cfg: ModelConfig, pos,
+                             cross_feats, block_tables, active, max_seq):
+    """Paged counterpart of `_decode_attn_block`: identical q/k/v math
+    (same rope over the same per-slot positions), but the new token's K/V
+    is scattered into its slot's tail page and attention gathers through
+    the block table.  Inactive slots' writes route to the trash page, so
+    live pages are never clobbered (the dense path's `keep` select has no
+    slot-major arena axis to apply to)."""
+    h_in = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _project_qkv(p["attn"], h_in, cfg)
+    pos_a = jnp.asarray(pos)
+    assert pos_a.ndim == 1, "paged decode is per-slot (continuous batching)"
+    posq = pos_a[:, None, None]
+    q = apply_rope(q, posq, cfg.rope_theta)
+    k = apply_rope(k, posq, cfg.rope_theta)
+
+    b = x.shape[0]
+    bs = cache["k"].shape[-2]
+    nb = block_tables.shape[1]
+    trash = cache["k"].shape[0] - 1
+    j = jnp.clip(pos_a // bs, 0, nb - 1)
+    off = pos_a % bs
+    phys = block_tables[jnp.arange(b), j]
+    phys = jnp.where(active, phys, trash)
+    heads = jnp.arange(cfg.n_kv_heads)[None, :]
+    k_arena = cache["k"].at[phys[:, None], heads, off[:, None]].set(
+        k[:, :, 0, :].astype(cache["k"].dtype))
+    v_arena = cache["v"].at[phys[:, None], heads, off[:, None]].set(
+        v[:, :, 0, :].astype(cache["v"].dtype))
+
+    out = attn_lib.paged_decode_attention(
+        q, k_arena, v_arena, block_tables, pos_a, max_seq=max_seq,
+        impl=cfg.paged_attention_impl)
+    x = x + _merge_heads(out, p["attn"], cfg)
+    if "xattn" in p and cross_feats is not None:
+        x = x + _cross_attention(p, x, cross_feats, cfg)
+    x = _mlp(p, x, cfg)
+    return x, {"k": k_arena, "v": v_arena}
+
+
+def decode_step_slots_paged(params, cfg: ModelConfig, cache: Dict,
+                            tokens: jax.Array, active: jax.Array, *,
+                            max_seq: int):
+    """One engine step over independent slots on the block-paged cache.
+
+    Same contract as :func:`decode_step_slots` — tokens (B, 1), active
+    (B,) bool, per-slot ``cache["pos"]`` — plus ``cache["block_tables"]``
+    (B, NB) naming each slot's physical pages.  ``max_seq`` (static) trims
+    the gathered rows to the dense layout's sequence axis so outputs are
+    BIT-IDENTICAL to `decode_step_slots` on the equivalent dense cache
+    (asserted in tests/test_paged.py and the serving bench).  Inactive
+    slots keep position, recurrent state and their live pages bit-for-bit
+    (their KV write lands in the trash page).
+
+    Everything except the attention block step is the one shared
+    `_decode_step_impl` body the dense paths run."""
+    pos = cache["pos"]
+    cross_feats = cache.get("cross")
+    block_tables = cache["block_tables"]
+
+    def block_step(btype, p, h, c):
+        if btype == "attn":
+            return _decode_attn_block_paged(p, h, c, cfg, pos, cross_feats,
+                                            block_tables, active, max_seq)
+        return _decode_block(btype, p, h, c, cfg, pos, cross_feats)
+
+    return _decode_step_impl(params, cfg, cache, tokens, active,
+                             block_step=block_step, arena_passthrough=True)
 
 
 # ---------------------------------------------------------------------------

@@ -10,7 +10,10 @@ The hand-off is the paper's offload overhead (PCIe sync, Fig. 5 step 4)
 applied to the phase boundary: the loop meters the actual bytes it moves
 and prices them with ``core.cost_model.transfer_cost`` on the two phases'
 device models — the same model ``serving.placement`` uses to decide
-whether the split is worth it at all.
+whether the split is worth it at all.  Under the paged KV layout (the
+default) the migrated snapshot is block-granular — only the pages holding
+the prefilled tokens ship, not the slot's full ``max_seq`` reservation —
+so the metered hand-off bytes scale with the prompt.
 
 Each phase owns its own KV pool and its own :class:`ContinuousBatcher`,
 so admission and migration are budgeted per (phase, engine) pair: queued
@@ -71,6 +74,9 @@ class DisaggregatedEngineLoop:
 
     def __init__(self, cfg: T.ModelConfig, params, *, n_prefill_slots: int,
                  n_decode_slots: int, max_seq: int, block_size: int = 16,
+                 kv_layout: str = "paged",
+                 prefill_total_blocks: Optional[int] = None,
+                 decode_total_blocks: Optional[int] = None,
                  prefill_device_name: str = "tpu-v5e",
                  decode_device_name: str = "tpu-v5e",
                  prefill_device: Optional[device_models.DeviceModel] = None,
@@ -78,10 +84,15 @@ class DisaggregatedEngineLoop:
                  step_slo_s: Optional[float] = None,
                  handoff_link_bw: Optional[float] = None):
         self.cfg = cfg
-        prefill_pool = KVPool(n_prefill_slots, max_seq, block_size=block_size)
-        decode_pool = KVPool(n_decode_slots, max_seq, block_size=block_size)
-        self.prefill = SlotEngine(cfg, params, prefill_pool)
-        self.decode = SlotEngine(cfg, params, decode_pool)
+        self.kv_layout = kv_layout
+        prefill_pool = KVPool(n_prefill_slots, max_seq, block_size=block_size,
+                              total_blocks=prefill_total_blocks)
+        decode_pool = KVPool(n_decode_slots, max_seq, block_size=block_size,
+                             total_blocks=decode_total_blocks)
+        self.prefill = SlotEngine(cfg, params, prefill_pool,
+                                  kv_layout=kv_layout)
+        self.decode = SlotEngine(cfg, params, decode_pool,
+                                 kv_layout=kv_layout)
         self.prefill_batcher = ContinuousBatcher(
             cfg, prefill_pool, phase="prefill",
             device_name=prefill_device_name, device_model=prefill_device,

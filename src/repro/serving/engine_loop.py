@@ -32,6 +32,8 @@ open-loop arrival process (request.synthetic_workload) is offered against.
 """
 from __future__ import annotations
 
+import functools
+import math
 import time
 from typing import Callable, Dict, List, Optional
 
@@ -50,19 +52,21 @@ __all__ = ["EngineLoop", "ServeMetrics", "SlotEngine", "StreamDelta",
            "TokenSink"]
 
 
-def _fused_step(params, cfg, cache, prompts, plens, last_tok, out_buf,
-                active):
+def _fused_step(step_fn, params, cfg, cache, prompts, plens, last_tok,
+                out_buf, active):
     """Device-side feed + step + sample + output scatter.
 
     prompts: (B, P_max) int32; plens/last_tok: (B,) int32; out_buf:
     (B, G_max) int32; active: (B,) bool.  cache["pos"] counts tokens fed
-    per slot, so pos < plen selects the prompt, else the last sample."""
+    per slot, so pos < plen selects the prompt, else the last sample.
+    ``step_fn`` is the layout's slot step (`decode_step_slots` dense,
+    `decode_step_slots_paged` paged) — same contract, bit-identical
+    outputs."""
     b = prompts.shape[0]
     pos = cache["pos"]
     prompt_tok = prompts[jnp.arange(b), jnp.minimum(pos, prompts.shape[1] - 1)]
     tok = jnp.where(pos < plens, prompt_tok, last_tok)
-    logits, cache = T.decode_step_slots(params, cfg, cache, tok[:, None],
-                                        active)
+    logits, cache = step_fn(params, cfg, cache, tok[:, None], active)
     nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
     # the sample is output index (pos - plen + 1); valid once the final
     # prompt token has been fed (same schedule as the static replay path)
@@ -90,12 +94,24 @@ class SlotEngine:
     # buckets 1..MAX_BUCKET)
     MAX_BUCKET = 32
 
-    def __init__(self, cfg: T.ModelConfig, params, pool: KVPool):
+    def __init__(self, cfg: T.ModelConfig, params, pool: KVPool, *,
+                 kv_layout: str = "dense"):
+        if kv_layout not in ("dense", "paged"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}")
         self.cfg = cfg
         self.params = params
         self.pool = pool
+        self.kv_layout = kv_layout
         n_slots = pool.n_slots
-        self.cache = T.init_slot_cache(cfg, n_slots, pool.max_seq)
+        if kv_layout == "paged":
+            self.cache = T.init_slot_cache_paged(
+                cfg, n_slots, pool.max_seq, block_size=pool.block_size,
+                total_blocks=pool.total_blocks)
+            self._step_fn = functools.partial(T.decode_step_slots_paged,
+                                              max_seq=pool.max_seq)
+        else:
+            self.cache = T.init_slot_cache(cfg, n_slots, pool.max_seq)
+            self._step_fn = T.decode_step_slots
         self.max_prompt = pool.max_seq
         self.max_gen = pool.max_seq
         self._prompts = jnp.zeros((n_slots, self.max_prompt), jnp.int32)
@@ -116,11 +132,13 @@ class SlotEngine:
         fn = self._burst_fns.get(k)
         if fn is None:
             cfg = self.cfg
+            step_fn = self._step_fn
 
             def burst(p, c, pr, pl, lt, ob, a):
                 def body(carry, _):
                     c, lt, ob = carry
-                    return _fused_step(p, cfg, c, pr, pl, lt, ob, a), None
+                    return (_fused_step(step_fn, p, cfg, c, pr, pl, lt, ob,
+                                        a), None)
                 (c, lt, ob), _ = jax.lax.scan(body, (c, lt, ob), None,
                                               length=k)
                 return c, lt, ob
@@ -130,8 +148,10 @@ class SlotEngine:
         return fn
 
     def warmup(self) -> None:
-        """Compile every burst bucket.  An all-inactive step leaves cache,
-        positions and buffers bit-identical, so this is state-neutral."""
+        """Compile every burst bucket.  An all-inactive step leaves
+        positions, live KV state and buffers bit-identical (the paged
+        layout's trash page is the only thing written, and it is never
+        read), so this is state-neutral."""
         idle = jnp.zeros((self.pool.n_slots,), bool)
         b = 1
         while b <= self.MAX_BUCKET:
@@ -158,6 +178,15 @@ class SlotEngine:
         row[:req.prompt_len] = req.prompt
         self._prompts = self._prompts.at[s].set(jnp.asarray(row))
         self._plens = self._plens.at[s].set(req.prompt_len)
+        if self.kv_layout == "paged":
+            # upload the slot's logical->physical page map (lease order IS
+            # the block table)
+            table = self.pool.block_table(
+                req.rid, pad_to=self.cache["block_tables"].shape[1])
+            cache = dict(self.cache)
+            cache["block_tables"] = cache["block_tables"].at[s].set(
+                jnp.asarray(table))
+            self.cache = cache
         self.cache = T.reset_slot_state(self.cfg, self.cache, s)
         self.slots[s] = req
         self.steps_done[s] = 0
@@ -196,36 +225,82 @@ class SlotEngine:
         self.active[req.slot] = False
 
     # ---- slot hand-off (phase disaggregation) ----------------------------
+    def _layer_take(self, take_slot, take_arena):
+        """Map the layout-appropriate extractor over each layer cache:
+        paged attention layers carry block arenas (page-granular take),
+        everything else is slot-major (slot-granular take)."""
+        blocks, rem = self.cache["layers"]
+
+        def one(c, stacked):
+            if (self.kv_layout == "paged" and isinstance(c, dict)
+                    and "k" in c):
+                return jax.tree.map(lambda a: take_arena(a, stacked), c)
+            take = take_slot[1] if stacked else take_slot[0]
+            return jax.tree.map(take, c)
+
+        return (tuple(one(c, True) for c in blocks),
+                tuple(one(c, False) for c in rem))
+
     def export_slot(self, s: int) -> Dict:
         """Snapshot every per-slot tensor a request needs to resume on
-        another engine: KV rows / recurrent states / position, the per-slot
-        cross-attention features (vision/enc-dec caches), the prompt row +
-        feed state, and the sampled-output row.  This is the payload the
-        placement analyzer prices with the offload-overhead model."""
-        blocks, rem = self.cache["layers"]
-        cross = self.cache.get("cross")
-        take_b = lambda a: a[:, s] if getattr(a, "ndim", 0) >= 2 else a
+        another engine: KV state / recurrent states / position, the
+        per-slot cross-attention features (vision/enc-dec caches), the
+        prompt row + feed state, and the sampled-output row.  This is the
+        payload the placement analyzer prices with the offload-overhead
+        model.
+
+        Dense layout ships the slot's whole ``max_seq`` KV rows; the paged
+        layout ships only the pages that actually hold written tokens
+        (``kv_tokens`` of them), so the hand-off payload scales with the
+        prompt, not the reservation."""
         take_r = lambda a: a[s] if getattr(a, "ndim", 0) >= 1 else a
-        return {
-            "blocks": jax.tree.map(take_b, blocks),
-            "rem": jax.tree.map(take_r, rem),
+        take_b = lambda a: a[:, s] if getattr(a, "ndim", 0) >= 2 else a
+        state = {
+            "layout": self.kv_layout,
             "pos": self.cache["pos"][s],
-            "cross": None if cross is None else cross[s],
+            "cross": None,
             "prompt": self._prompts[s],
             "plen": self._plens[s],
             "last_tok": self._last_tok[s],
             "out_row": self._out_buf[s],
         }
+        cross = self.cache.get("cross")
+        if cross is not None:
+            state["cross"] = cross[s]
+        if self.kv_layout == "paged":
+            req = self.slots[s]
+            lease = self.pool.lease(req.rid)
+            n_used = math.ceil(lease.written_tokens / self.pool.block_size)
+            phys = jnp.asarray(np.asarray(lease.blocks[:n_used], np.int32))
+            take_arena = lambda a, stacked: (a[:, phys] if stacked
+                                             else a[phys])
+            state["kv_tokens"] = lease.written_tokens
+        else:
+            take_arena = None
+        state["blocks"], state["rem"] = self._layer_take(
+            (take_r, take_b), take_arena)
+        return state
 
-    def import_slot(self, s: int, state: Dict) -> None:
+    def import_slot(self, s: int, state: Dict, *,
+                    dest_blocks: Optional[List[int]] = None) -> None:
         """Install an exported slot snapshot into slot ``s`` (bit-exact:
         the imported request decodes the same tokens it would have
         produced had it stayed on the exporting engine).
 
         The cache is rebuilt by copy-and-update of ``self.cache`` so every
-        key ``init_slot_cache`` carries survives the migration (a literal
-        rebuild used to silently drop unknown keys), and per-slot cross-
-        attention rows are migrated rather than shared."""
+        key the layout carries survives the migration (a literal rebuild
+        used to silently drop unknown keys), and per-slot cross-attention
+        rows are migrated rather than shared.  Paged layout: the shipped
+        pages land in this engine's arena at ``dest_blocks`` (the slot's
+        new lease, logical order) and the slot's block table is rebuilt
+        from that lease — physical page ids never migrate across engines.
+        """
+        layout = state.get("layout", "dense")
+        if layout != self.kv_layout:
+            raise ValueError(
+                f"exported slot uses the {layout!r} KV layout but the "
+                f"importing engine runs {self.kv_layout!r} — phase engines "
+                f"must share a layout for exact migration")
         cross = self.cache.get("cross")
         if cross is not None and state.get("cross") is None:
             raise ValueError(
@@ -238,17 +313,49 @@ class SlotEngine:
                 "importing engine has no cross cache — silently dropping "
                 "it would corrupt the migrated request (engines built for "
                 "different configs)")
-        blocks, rem = self.cache["layers"]
         set_b = lambda a, v: (a.at[:, s].set(v)
                               if getattr(a, "ndim", 0) >= 2 else a)
         set_r = lambda a, v: (a.at[s].set(v)
                               if getattr(a, "ndim", 0) >= 1 else a)
+        if self.kv_layout == "paged":
+            if dest_blocks is None:
+                raise ValueError("paged import needs dest_blocks (the "
+                                 "slot's lease on this engine)")
+            n_used = math.ceil(int(state["kv_tokens"])
+                               / self.pool.block_size)
+            if n_used > len(dest_blocks):
+                raise ValueError(
+                    f"snapshot carries {n_used} written pages but the "
+                    f"destination lease holds {len(dest_blocks)} blocks")
+            phys = jnp.asarray(np.asarray(dest_blocks[:n_used], np.int32))
+            set_arena = {
+                True: lambda a, v: a.at[:, phys].set(v),
+                False: lambda a, v: a.at[phys].set(v),
+            }
+        else:
+            set_arena = None
+
+        def set_layer(c, v, stacked):
+            if (self.kv_layout == "paged" and isinstance(c, dict)
+                    and "k" in c):
+                return jax.tree.map(set_arena[stacked], c, v)
+            return jax.tree.map(set_b if stacked else set_r, c, v)
+
+        blocks, rem = self.cache["layers"]
         cache = dict(self.cache)
-        cache["layers"] = (jax.tree.map(set_b, blocks, state["blocks"]),
-                           jax.tree.map(set_r, rem, state["rem"]))
+        cache["layers"] = (
+            tuple(set_layer(c, v, True)
+                  for c, v in zip(blocks, state["blocks"])),
+            tuple(set_layer(c, v, False)
+                  for c, v in zip(rem, state["rem"])))
         cache["pos"] = self.cache["pos"].at[s].set(state["pos"])
         if cross is not None:
             cache["cross"] = cross.at[s].set(state["cross"])
+        if self.kv_layout == "paged":
+            table = np.zeros((cache["block_tables"].shape[1],), np.int32)
+            table[:len(dest_blocks)] = dest_blocks
+            cache["block_tables"] = cache["block_tables"].at[s].set(
+                jnp.asarray(table))
         self.cache = cache
         self._prompts = self._prompts.at[s].set(state["prompt"])
         self._plens = self._plens.at[s].set(state["plen"])
@@ -260,7 +367,9 @@ class SlotEngine:
         the pool already assigned (``req.slot``) and reset the per-slot
         schedule for the steps this engine owes."""
         s = req.slot
-        self.import_slot(s, state)
+        dest = (self.pool.lease(req.rid).blocks
+                if self.kv_layout == "paged" else None)
+        self.import_slot(s, state, dest_blocks=dest)
         self.slots[s] = req
         self.steps_done[s] = 0
         self.steps_total[s] = steps_total
@@ -268,8 +377,10 @@ class SlotEngine:
 
     @staticmethod
     def state_nbytes(state: Dict) -> int:
-        """Byte size of an exported slot snapshot (the hand-off payload)."""
-        return sum(int(leaf.nbytes) for leaf in jax.tree.leaves(state))
+        """Byte size of an exported slot snapshot (the hand-off payload).
+        Non-array metadata (layout tag, written-token count) is free."""
+        return sum(int(leaf.nbytes) for leaf in jax.tree.leaves(state)
+                   if hasattr(leaf, "nbytes"))
 
 
 class EngineLoop:
@@ -284,18 +395,21 @@ class EngineLoop:
     def __init__(self, cfg: T.ModelConfig, params, *, n_slots: int,
                  max_seq: int, block_size: int = 16,
                  total_blocks: Optional[int] = None,
+                 kv_layout: str = "paged",
                  device_name: str = "tpu-v5e",
                  device_model=None,
                  step_slo_s: Optional[float] = None,
                  token_budget: Optional[int] = None):
         self.cfg = cfg
+        self.kv_layout = kv_layout
         self.pool = KVPool(n_slots, max_seq, block_size=block_size,
                            total_blocks=total_blocks)
         self.batcher = ContinuousBatcher(
             cfg, self.pool, device_name=device_name,
             device_model=device_model, step_slo_s=step_slo_s,
             token_budget=token_budget)
-        self.engine = SlotEngine(cfg, params, self.pool)
+        self.engine = SlotEngine(cfg, params, self.pool,
+                                 kv_layout=kv_layout)
 
     def warmup(self) -> None:
         self.engine.warmup()

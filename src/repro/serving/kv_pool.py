@@ -1,25 +1,37 @@
 """Slot-based paged KV-cache pool.
 
-One preallocated cache (``models.transformer.init_slot_cache``) holds
-``n_slots`` rows of ``max_seq`` positions.  Rows are *slots* — the physical
-unit a request binds to for its lifetime.  On top of the rows sits a logical
-*block* ledger (fixed ``block_size``-token blocks drawn from one global free
-list): admission reserves a request's full footprint in blocks, so the pool
-can be provisioned for total tokens-in-flight rather than
-``n_slots x max_seq`` worst case (``total_blocks`` < dense is the paged
+The pool manages two resources: *slots* (the batch row a request binds to
+for its lifetime) and *blocks* (fixed ``block_size``-token KV pages drawn
+from one global free list).  Admission reserves a request's full footprint
+in blocks, so the pool can be provisioned for total tokens-in-flight rather
+than ``n_slots x max_seq`` worst case (``total_blocks`` < dense is the paged
 sharing the vLLM line of work exploits; the ledger also yields the
 utilization / fragmentation accounting the batcher and metrics report).
 
-Invariants (property-tested in tests/test_serving.py):
+Under the *paged* KV layout (``models.transformer.init_slot_cache_paged``)
+the block ledger is physical: each layer's K/V lives in one
+``(total_blocks + 1) x n_kv_heads x block_size x head_dim`` arena, and a
+request's lease order IS its block table — block ``j`` of the lease holds
+tokens ``[j * block_size, (j + 1) * block_size)``.  :meth:`block_table`
+exports that mapping as the padded int32 row the decode step gathers
+through.  Under the legacy *dense* layout
+(``models.transformer.init_slot_cache``) the same ledger is accounting
+only, over physically ``max_seq``-long slot rows.
+
+Invariants (property-tested in tests/test_serving.py + tests/test_paged.py):
   * a block belongs to at most one request; free+allocated == total_blocks;
   * a slot belongs to at most one request; double alloc/free raises;
-  * utilization = written tokens / (allocated blocks x block_size) <= 1.
+  * utilization = written tokens / (allocated blocks x block_size) <= 1;
+  * blocks are interchangeable — fragmentation never blocks an admit whose
+    block count fits the free list.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 from typing import Dict, List, Optional
+
+import numpy as np
 
 
 @dataclasses.dataclass
@@ -110,6 +122,22 @@ class KVPool:
 
     def lease(self, rid: int) -> SlotLease:
         return self._leases[rid]
+
+    def block_table(self, rid: int, pad_to: Optional[int] = None
+                    ) -> np.ndarray:
+        """The request's physical block ids in logical order (block ``j``
+        holds tokens ``[j * block_size, (j + 1) * block_size)``), padded
+        with 0 to ``pad_to`` entries — the row the paged decode step's
+        gather indexes with.  Padding entries are never dereferenced for a
+        valid position (the per-slot position mask hides them)."""
+        blocks = self._leases[rid].blocks
+        n = len(blocks) if pad_to is None else pad_to
+        if len(blocks) > n:
+            raise ValueError(f"request {rid} holds {len(blocks)} blocks, "
+                             f"pad_to={pad_to} is smaller")
+        row = np.zeros((n,), np.int32)
+        row[:len(blocks)] = blocks
+        return row
 
     # ---- accounting ------------------------------------------------------
     @property

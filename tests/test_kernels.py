@@ -124,6 +124,63 @@ def test_flash_attention_unaligned_padding():
     _assert_close(got, want, jnp.bfloat16)
 
 
+# ------------------------------------------------------ paged attention
+def _paged_case(rng, *, b, hq, hk, d, bs, nb, dtype, shuffle=True):
+    """Random decode case: arena of physical pages + per-slot block tables
+    (non-contiguous when shuffled) + per-slot positions on odd block
+    boundaries."""
+    tb = b * nb + 1                                  # + trash page
+    q = jnp.asarray(rng.normal(size=(b, hq, 1, d)), dtype)
+    ka = jnp.asarray(rng.normal(size=(tb, hk, bs, d)), dtype)
+    va = jnp.asarray(rng.normal(size=(tb, hk, bs, d)), dtype)
+    ids = np.arange(tb - 1) + 1
+    if shuffle:
+        ids = rng.permutation(ids)
+    bt = jnp.asarray(ids[:b * nb].reshape(b, nb).astype(np.int32))
+    pos = jnp.asarray(
+        rng.integers(0, nb * bs, size=(b,)).astype(np.int32))
+    return q, ka, va, bt, pos
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("hq,hk", [(8, 8), (8, 2), (4, 1)])
+def test_paged_attention_gqa(rng, hq, hk, dtype):
+    q, ka, va, bt, pos = _paged_case(rng, b=3, hq=hq, hk=hk, d=64, bs=16,
+                                     nb=4, dtype=dtype)
+    got = ops.paged_attention(q, ka, va, bt, pos)
+    want = ref.paged_attention_ref(q, ka, va, bt, pos)
+    _assert_close(got, want, jnp.bfloat16)   # online softmax: bf16-level tol
+
+
+@pytest.mark.parametrize("pos_list", [[0], [15], [16], [17], [63]])
+def test_paged_attention_block_boundaries(rng, pos_list):
+    # positions sitting exactly on / beside page edges — the block-skip
+    # predicate and the boundary mask must agree with the dense oracle
+    b = len(pos_list)
+    q, ka, va, bt, _ = _paged_case(rng, b=b, hq=4, hk=2, d=32, bs=16, nb=4,
+                                   dtype=jnp.float32)
+    pos = jnp.asarray(np.asarray(pos_list, np.int32))
+    got = ops.paged_attention(q, ka, va, bt, pos)
+    want = ref.paged_attention_ref(q, ka, va, bt, pos)
+    _assert_close(got, want, jnp.bfloat16)
+
+
+def test_paged_ref_trims_sequence_overhang(rng):
+    # max_seq not a multiple of block_size: the gathered rows must trim the
+    # tail pages' overhang, matching a dense cache of exactly max_seq
+    from repro.models.attention import decode_attention
+    b, hk, d, bs, nb, max_seq = 2, 2, 32, 8, 3, 21
+    q, ka, va, bt, _ = _paged_case(rng, b=b, hq=4, hk=hk, d=d, bs=bs, nb=nb,
+                                   dtype=jnp.float32)
+    pos = jnp.asarray(np.array([5, 20], np.int32))
+    dense_k = ref.paged_gather(ka, bt, max_seq)
+    dense_v = ref.paged_gather(va, bt, max_seq)
+    assert dense_k.shape == (b, hk, max_seq, d)
+    want = decode_attention(q, dense_k, dense_v, pos=pos)
+    got = ref.paged_attention_ref(q, ka, va, bt, pos, max_seq=max_seq)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_conv_vmem_budget():
     """Every AlexNet conv layer's per-image working set fits 16 MiB VMEM —
     the Table III resource-constraint analogue."""

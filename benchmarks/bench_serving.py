@@ -17,6 +17,10 @@ section compares incremental (burst-boundary) token delivery against the
 completion pull in both colocated and disaggregated modes — streamed
 deltas must concatenate to exactly the completion rows, and the honest
 (host-visible) TTFT is reported next to the old dispatch-time stamp.
+The ``observability`` section prices the tracing layer: NullTracer and
+fully traced throughput relative to the untraced baseline (the NullTracer
+ratio is the gated overhead bound) plus bit-identity of every traced run
+and trace-health counts (spans balanced, lifecycle coverage, ring drops).
 
 Static batching groups requests by prompt length (the legacy server is
 rectangular), waits for a full batch to arrive, and decodes every batch to
@@ -37,6 +41,7 @@ import numpy as np
 
 from repro.launch.serve import Server
 from repro.models import transformer as T
+from repro.obs import Observability, Tracer
 from repro.serving import (DisaggregatedEngineLoop, EngineLoop, ServeMetrics,
                            place_phases, synthetic_workload)
 
@@ -47,6 +52,11 @@ SMOKE_CFG = T.ModelConfig(
 
 PROMPT_LENS = (8, 16)
 GEN_LENS = (4, 8, 16, 64)
+
+# best-of-N repetitions for the observability overhead ratios: sub-second
+# smoke runs jitter by a few percent on a shared host, and the gated
+# NullTracer bound must measure tracing cost, not scheduler noise
+_OBS_REPS = 5
 
 
 def _workload(n: int, rate: float, vocab: int, seed: int):
@@ -322,8 +332,9 @@ def run_streaming(cfg, params, baselines: Dict, *, n_requests: int,
                 r.ttft_dispatch <= r.ttft for r in comp_reqs + strm_reqs
                 if r.ttft is not None and r.ttft_dispatch is not None),
             # host-visibility gap the dispatch-stamped TTFT used to hide
+            # (None, not NaN: the report must stay strict JSON)
             "ttft_gap_p50_s": (float(np.percentile(np.asarray(gaps), 50))
-                               if gaps else float("nan")),
+                               if gaps else None),
             "sync_cost_tok_per_s_ratio": s["tok_per_s"] / c["tok_per_s"],
         }
         print(f"[bench_serving] streaming[{mode}]: ttft p50 "
@@ -338,6 +349,107 @@ def run_streaming(cfg, params, baselines: Dict, *, n_requests: int,
         section[m]["bit_identical"] and section[m]["delta_concat_identical"]
         and section[m]["ttft_dispatch_leq_ttft"]
         for m in ("colocated", "disaggregated"))
+    return section
+
+
+def run_observability(cfg, params, baselines: Dict, *, n_requests: int,
+                      slots: int, max_len: int, seed: int) -> Dict:
+    """Cost and correctness of the observability layer on the saturation
+    workload.
+
+    Three colocated configurations of the same workload: an untraced
+    baseline, a run with the default ``NullTracer`` constructed
+    explicitly (the tracing-off tax: guard branches only), and a fully
+    traced run (ring-buffer ``Tracer`` plus per-iteration registry
+    sampling), plus a traced disaggregated run so the hand-off span is
+    exercised.  Tracing happens strictly between device dispatches, so
+    every run must stay bit-identical to the untraced outputs
+    (``baselines`` supplies :func:`run_disaggregation`'s reference rows);
+    the NullTracer throughput ratio is the gated overhead bound (the
+    traced ratio is reported, not gated — a full ring-buffer trace is a
+    debugging artifact, not the steady state).  A sub-second smoke run's
+    tok/s jitters by several percent on a shared host, so the reps are
+    interleaved round-robin across the three configurations (every config
+    samples the same host-load windows) and each reports its best rep —
+    the standard min-time estimator — rather than one sample."""
+    _, untraced_reqs = baselines["colocated"]
+    untraced_out = {r.rid: r.output for r in untraced_reqs}
+    _, dis_reqs = baselines["disaggregated"]
+    dis_out = {r.rid: r.output for r in dis_reqs}
+
+    def _mk(obs):
+        eng = EngineLoop(cfg, params, n_slots=slots, max_seq=max_len,
+                         obs=obs)
+        eng.warmup()
+        return eng
+
+    traced_obs = Observability(tracer=Tracer())
+    engines = {"untraced": _mk(None),       # EngineLoop's default obs
+               "null": _mk(Observability()),
+               "traced": _mk(traced_obs)}
+    best: Dict[str, object] = {}
+    outs: Dict[str, Dict[int, List[int]]] = {}
+    for _ in range(_OBS_REPS):
+        for key, eng in engines.items():
+            reqs = _workload(n_requests, 1e9, cfg.vocab, seed)
+            m = eng.run(reqs)
+            if key not in best or m.summary()["tok_per_s"] > \
+                    best[key].summary()["tok_per_s"]:
+                best[key] = m
+            rows = {r.rid: r.output for r in reqs}
+            assert outs.setdefault(key, rows) == rows   # deterministic reps
+    m_untraced, m_null, m_traced = (best["untraced"], best["null"],
+                                    best["traced"])
+    plain_out, null_out, traced_out = (outs["untraced"], outs["null"],
+                                       outs["traced"])
+
+    dtraced_obs = Observability(tracer=Tracer())
+    dtraced_reqs = _workload(n_requests, 1e9, cfg.vocab, seed)
+    dtraced = DisaggregatedEngineLoop(
+        cfg, params, n_prefill_slots=max(slots // 2, 1),
+        n_decode_slots=slots, max_seq=max_len, obs=dtraced_obs)
+    dtraced.warmup()
+    dtraced.run(dtraced_reqs)
+    dtraced_out = {r.rid: r.output for r in dtraced_reqs}
+
+    names = {e.name for e in traced_obs.tracer.events}
+    dnames = {e.name for e in dtraced_obs.tracer.events}
+    lifecycle = {"queued", "prefill", "decode", "burst", "sync",
+                 "first_token", "done"}
+    u, nl, tr = (m_untraced.summary(), m_null.summary(),
+                 m_traced.summary())
+    section = {
+        "untraced": u,
+        "null_tracer": nl,
+        "traced": tr,
+        # gated bound: the cost of shipping with tracing compiled in but
+        # off; the traced ratio is informational
+        "overhead_ratio_null": nl["tok_per_s"] / u["tok_per_s"],
+        "overhead_ratio_traced": tr["tok_per_s"] / u["tok_per_s"],
+        "bit_identical_null": untraced_out == plain_out == null_out,
+        "bit_identical_traced": untraced_out == traced_out,
+        "bit_identical_traced_disagg": dis_out == dtraced_out,
+        "trace_events": len(traced_obs.tracer),
+        "trace_events_disagg": len(dtraced_obs.tracer),
+        "trace_dropped": traced_obs.tracer.n_dropped,
+        "trace_spans_balanced": (traced_obs.tracer.n_open == 0
+                                 and dtraced_obs.tracer.n_open == 0),
+        "lifecycle_spans_present": lifecycle <= names,
+        "handoff_span_present": "handoff" in dnames,
+        "metrics_series_points": traced_obs.registry.n_samples,
+    }
+    section["all_identical"] = (section["bit_identical_null"]
+                                and section["bit_identical_traced"]
+                                and section["bit_identical_traced_disagg"]
+                                and section["trace_spans_balanced"]
+                                and section["lifecycle_spans_present"]
+                                and section["handoff_span_present"])
+    print(f"[bench_serving] observability: null-tracer "
+          f"{section['overhead_ratio_null']:.3f}x, traced "
+          f"{section['overhead_ratio_traced']:.3f}x of untraced tok/s; "
+          f"{section['trace_events']} events "
+          f"({section['trace_dropped']} dropped), "
+          f"bit_identical={section['all_identical']}", flush=True)
     return section
 
 
@@ -385,13 +497,17 @@ def run_bench(*, n_requests: int, slots: int, rates: List[float],
     results["streaming"] = run_streaming(
         cfg, params, baselines, n_requests=n_requests, slots=slots,
         max_len=max_len, seed=seed)
+    results["observability"] = run_observability(
+        cfg, params, baselines, n_requests=n_requests, slots=slots,
+        max_len=max_len, seed=seed)
     results["max_speedup"] = max(l["speedup_tok_per_s"]
                                  for l in results["loads"])
     results["all_bit_identical"] = all(
         [l["bit_identical"] for l in results["loads"]]
         + [results["disaggregation"]["bit_identical"],
            results["paged"]["all_identical"],
-           results["streaming"]["all_identical"]])
+           results["streaming"]["all_identical"],
+           results["observability"]["all_identical"]])
     return results
 
 
@@ -409,7 +525,9 @@ def main() -> None:
     rates = args.rates or ([1e9] if args.scale == "tiny" else [16.0, 1e9])
     results = run_bench(n_requests=n, slots=args.slots, rates=rates)
     with open(args.out, "w") as f:
-        json.dump(results, f, indent=2)
+        # strict JSON: a NaN stat leaking into the report is a bug (see
+        # ServeMetrics.summary on zero-completion runs), not a value
+        json.dump(results, f, indent=2, allow_nan=False)
     print(f"[bench_serving] wrote {args.out}: max speedup "
           f"{results['max_speedup']:.2f}x, bit_identical="
           f"{results['all_bit_identical']}")

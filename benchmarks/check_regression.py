@@ -30,18 +30,38 @@ disaggregated modes and ``kv_bytes_paged`` strictly below
 present and well-formed (streamed outputs bit-identical to the completion
 pull, deltas concatenating to exactly the completion rows,
 ``ttft_dispatch <= ttft``) — so a malformed BENCH_serving.json fails the
-gate instead of slipping through.
+gate instead of slipping through.  The ``observability`` section must be
+present and well-formed: traced runs bit-identical to untraced, spans
+balanced with full lifecycle coverage, and the NullTracer throughput
+ratio at or above the overhead floor.  Every required stat is checked
+with :func:`_num`, which rejects NaN/inf — a zero-completion run's
+``None`` percentiles fail the gate instead of sailing through as NaN.
+
+``--trace trace.json`` gates a Chrome trace-event file written by
+``serve --trace`` (``--fresh`` becomes optional): strict JSON (NaN and
+Infinity literals rejected), non-empty well-formed ``traceEvents``, no
+unclosed spans, and at least one span/instant per request-lifecycle
+stage (``--require-handoff`` adds the disaggregated hand-off span).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 import platform
 import sys
 from typing import List, Tuple
 
 DEFAULT_BASELINES_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+
+
+def _num(v) -> bool:
+    """True only for finite real numbers: a required stat that is None,
+    NaN or inf is a malformed report, not a value (bool is an int
+    subclass, so it is rejected explicitly)."""
+    return (isinstance(v, (int, float)) and not isinstance(v, bool)
+            and math.isfinite(v))
 
 
 def host_key() -> str:
@@ -101,8 +121,8 @@ def validate_paged(fresh: dict) -> List[Tuple[str, bool, str]]:
                  f"missing or not an object: {type(section).__name__}")]
     problems: List[str] = []
     for k in _PAGED_NUMERIC_KEYS:
-        if not isinstance(section.get(k), (int, float)):
-            problems.append(f"{k}: not a number")
+        if not _num(section.get(k)):
+            problems.append(f"{k}: not a finite number")
     for k in _PAGED_BOOL_KEYS:
         if not isinstance(section.get(k), bool):
             problems.append(f"{k}: not a bool")
@@ -112,8 +132,8 @@ def validate_paged(fresh: dict) -> List[Tuple[str, bool, str]]:
             problems.append(f"{layout}: missing summary")
             continue
         for k in ("tok_per_s", "tokens_out", "requests_done"):
-            if not isinstance(summ.get(k), (int, float)):
-                problems.append(f"{layout}.{k}: not a number")
+            if not _num(summ.get(k)):
+                problems.append(f"{layout}.{k}: not a finite number")
     checks.append(("paged section schema", not problems,
                    "; ".join(problems) if problems else
                    "layout summaries + memory accounting well-formed"))
@@ -152,8 +172,9 @@ def validate_streaming(fresh: dict) -> List[Tuple[str, bool, str]]:
                 problems.append(f"{mode}.{kind}: missing summary")
                 continue
             for k in _STREAMING_SUMMARY_KEYS:
-                if not isinstance(summ.get(k), (int, float)):
-                    problems.append(f"{mode}.{kind}.{k}: not a number")
+                if not _num(summ.get(k)):
+                    problems.append(f"{mode}.{kind}.{k}: not a finite "
+                                    f"number")
         for k in _STREAMING_BOOL_KEYS:
             if not isinstance(entry.get(k), bool):
                 problems.append(f"{mode}.{k}: not a bool")
@@ -177,6 +198,139 @@ def validate_streaming(fresh: dict) -> List[Tuple[str, bool, str]]:
         checks.append((
             f"streamed outputs identical to completion pull ({mode})", ok,
             ", ".join(f"{k}={entry.get(k)}" for k in _STREAMING_BOOL_KEYS)))
+    return checks
+
+
+# the overhead floor the NullTracer path must hold: tracing compiled in
+# but switched off may cost at most 2% of untraced saturation throughput
+OBS_OVERHEAD_FLOOR = 0.98
+
+_OBS_RATIO_KEYS = ("overhead_ratio_null", "overhead_ratio_traced")
+_OBS_BOOL_KEYS = ("bit_identical_null", "bit_identical_traced",
+                  "bit_identical_traced_disagg", "trace_spans_balanced",
+                  "lifecycle_spans_present", "handoff_span_present",
+                  "all_identical")
+_OBS_COUNT_KEYS = ("trace_events", "trace_events_disagg", "trace_dropped",
+                   "metrics_series_points")
+
+
+def validate_observability(fresh: dict) -> List[Tuple[str, bool, str]]:
+    """Schema + correctness checks for the ``observability`` section:
+    well-formed summaries, traced runs bit-identical to untraced with
+    balanced full-lifecycle spans, and the NullTracer throughput ratio at
+    or above :data:`OBS_OVERHEAD_FLOOR` (the traced ratio is reported but
+    not gated — a full ring-buffer trace is a debugging artifact)."""
+    checks: List[Tuple[str, bool, str]] = []
+    section = fresh.get("observability")
+    if not isinstance(section, dict):
+        return [("observability section present", False,
+                 f"missing or not an object: {type(section).__name__}")]
+    problems: List[str] = []
+    for k in _OBS_RATIO_KEYS + _OBS_COUNT_KEYS:
+        if not _num(section.get(k)):
+            problems.append(f"{k}: not a finite number")
+    for k in _OBS_BOOL_KEYS:
+        if not isinstance(section.get(k), bool):
+            problems.append(f"{k}: not a bool")
+    for run in ("untraced", "null_tracer", "traced"):
+        summ = section.get(run)
+        if not isinstance(summ, dict):
+            problems.append(f"{run}: missing summary")
+            continue
+        for k in ("tok_per_s", "tokens_out", "requests_done"):
+            if not _num(summ.get(k)):
+                problems.append(f"{run}.{k}: not a finite number")
+    checks.append(("observability section schema", not problems,
+                   "; ".join(problems) if problems else
+                   "untraced + null-tracer + traced summaries well-formed"))
+    if problems:
+        return checks
+    checks.append((
+        "traced outputs bit-identical to untraced",
+        section["all_identical"],
+        ", ".join(f"{k}={section[k]}" for k in _OBS_BOOL_KEYS[:3])))
+    checks.append((
+        "trace spans balanced with full lifecycle coverage",
+        section["trace_spans_balanced"]
+        and section["lifecycle_spans_present"]
+        and section["handoff_span_present"]
+        and section["trace_events"] > 0,
+        f"{section['trace_events']} events colocated, "
+        f"{section['trace_events_disagg']} disaggregated, "
+        f"{section['trace_dropped']} dropped"))
+    checks.append((
+        "null-tracer overhead within budget",
+        section["overhead_ratio_null"] >= OBS_OVERHEAD_FLOOR,
+        f"null-tracer {section['overhead_ratio_null']:.3f}x of untraced "
+        f"tok/s (floor {OBS_OVERHEAD_FLOOR}; traced "
+        f"{section['overhead_ratio_traced']:.3f}x, not gated)"))
+    return checks
+
+
+# every request lifecycle stage a serve --trace file must cover: complete
+# ("X") spans and instant ("i") markers emitted by the obs tracer
+_TRACE_REQUIRED_SPANS = ("queued", "prefill", "decode", "burst", "sync")
+_TRACE_REQUIRED_INSTANTS = ("first_token", "done")
+
+
+def validate_trace(path: str, *, require_handoff: bool = False
+                   ) -> List[Tuple[str, bool, str]]:
+    """Schema gate for a Chrome trace-event file written by
+    ``serve --trace``: strict JSON, well-formed events, no unclosed
+    spans, and at least one span per request-lifecycle stage."""
+    def _reject(const):
+        raise ValueError(f"non-finite JSON constant {const!r}")
+
+    try:
+        with open(path) as f:
+            trace = json.load(f, parse_constant=_reject)
+    except (OSError, ValueError) as e:
+        return [("trace is strict JSON", False, f"{path}: {e}")]
+    checks = [("trace is strict JSON", True, path)]
+
+    events = trace.get("traceEvents") if isinstance(trace, dict) else None
+    if not isinstance(events, list) or not events:
+        checks.append(("trace has events", False,
+                       "traceEvents missing, not a list, or empty"))
+        return checks
+
+    problems: List[str] = []
+    spans: dict = {}
+    instants: dict = {}
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict) or not isinstance(ev.get("ph"), str) \
+                or not isinstance(ev.get("name"), str):
+            problems.append(f"event {i}: malformed")
+            continue
+        ph, name = ev["ph"], ev["name"]
+        if ph == "M":                    # process_name metadata
+            continue
+        if not _num(ev.get("ts")):
+            problems.append(f"event {i} ({name}): ts not a finite number")
+        if ph == "X":
+            if not _num(ev.get("dur")) or ev["dur"] < 0:
+                problems.append(f"event {i} ({name}): bad dur")
+            spans[name] = spans.get(name, 0) + 1
+        elif ph == "i":
+            instants[name] = instants.get(name, 0) + 1
+    checks.append(("trace events well-formed", not problems,
+                   "; ".join(problems[:5]) if problems else
+                   f"{len(events)} events, {sum(spans.values())} spans"))
+
+    other = trace.get("otherData", {})
+    n_open = other.get("n_open", 0) if isinstance(other, dict) else 0
+    checks.append(("trace spans balanced", n_open == 0,
+                   f"{n_open} unclosed spans at export"))
+
+    required = list(_TRACE_REQUIRED_SPANS)
+    if require_handoff:
+        required.append("handoff")
+    missing = ([f"span:{n}" for n in required if not spans.get(n)]
+               + [f"instant:{n}" for n in _TRACE_REQUIRED_INSTANTS
+                  if not instants.get(n)])
+    checks.append(("trace covers the request lifecycle", not missing,
+                   "missing " + ", ".join(missing) if missing else
+                   ", ".join(f"{n}x{spans[n]}" for n in required)))
     return checks
 
 
@@ -213,8 +367,7 @@ def check_absolute(fresh: dict, *, threshold: float, baselines_dir: str,
     checks: List[Tuple[str, bool, str]] = []
     for name, base_v in recorded.get("metrics", {}).items():
         fresh_v = metrics.get(name)
-        if not isinstance(base_v, (int, float)) or not isinstance(
-                fresh_v, (int, float)):
+        if not _num(base_v) or not _num(fresh_v):
             checks.append((f"absolute {name} vs host baseline", False,
                            f"baseline {base_v!r} vs fresh {fresh_v!r}: "
                            f"not comparable"))
@@ -261,6 +414,7 @@ def compare(baseline: dict, fresh: dict, *, threshold: float,
                        f"{dis['handoff']['bytes_moved']} bytes"))
     checks.extend(validate_paged(fresh))
     checks.extend(validate_streaming(fresh))
+    checks.extend(validate_observability(fresh))
     return checks
 
 
@@ -268,8 +422,9 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline", default="BENCH_serving.json",
                     help="committed benchmark results (the reference)")
-    ap.add_argument("--fresh", required=True,
-                    help="freshly generated benchmark results to gate")
+    ap.add_argument("--fresh", default=None,
+                    help="freshly generated benchmark results to gate "
+                         "(required unless --trace is given)")
     ap.add_argument("--threshold", type=float, default=0.20,
                     help="allowed fractional regression (default 0.20)")
     ap.add_argument("--absolute", action="store_true",
@@ -281,19 +436,33 @@ def main() -> None:
                          "defines its floor)")
     ap.add_argument("--baselines-dir", default=DEFAULT_BASELINES_DIR,
                     help="directory of per-host absolute baselines")
+    ap.add_argument("--trace", default=None,
+                    help="gate a serve --trace Chrome trace-event file "
+                         "(schema + lifecycle coverage)")
+    ap.add_argument("--require-handoff", action="store_true",
+                    help="with --trace: require the disaggregated "
+                         "hand-off span")
     args = ap.parse_args()
+    if args.fresh is None and args.trace is None:
+        ap.error("at least one of --fresh / --trace is required")
 
-    with open(args.baseline) as f:
-        baseline = json.load(f)
-    with open(args.fresh) as f:
-        fresh = json.load(f)
+    checks: List[Tuple[str, bool, str]] = []
+    if args.fresh is not None:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        with open(args.fresh) as f:
+            fresh = json.load(f)
+        checks.extend(compare(baseline, fresh,
+                              threshold=args.threshold,
+                              absolute=args.absolute,
+                              baselines_dir=args.baselines_dir,
+                              record_absolute=args.record_absolute))
+    if args.trace is not None:
+        checks.extend(validate_trace(args.trace,
+                                     require_handoff=args.require_handoff))
 
     failed = False
-    for name, ok, detail in compare(baseline, fresh,
-                                    threshold=args.threshold,
-                                    absolute=args.absolute,
-                                    baselines_dir=args.baselines_dir,
-                                    record_absolute=args.record_absolute):
+    for name, ok, detail in checks:
         print(f"[check_regression] {'PASS' if ok else 'FAIL'}: "
               f"{name} — {detail}")
         failed |= not ok

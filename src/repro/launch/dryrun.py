@@ -20,13 +20,13 @@ why nothing else in the repo sets it globally.
 import argparse
 import json
 import re
-import time
 import traceback
-from typing import Dict, Optional
+from typing import Callable, Dict, Optional
 
 import jax
 
 from ..configs import registry
+from ..obs.trace import default_clock
 from .mesh import make_production_mesh
 from .steps import build_step
 
@@ -77,8 +77,13 @@ def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
 
 
 def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
-             extra_cfg: Optional[dict] = None) -> Dict:
-    """Lower + compile one cell; returns the roofline record."""
+             extra_cfg: Optional[dict] = None,
+             now_fn: Callable[[], float] = default_clock) -> Dict:
+    """Lower + compile one cell; returns the roofline record.
+
+    ``now_fn`` is the same injectable monotonic clock the serving stack
+    times with (``repro.obs.default_clock``); the old ``time.time()`` wall
+    clock steps under NTP and mis-measures lower/compile durations."""
     mesh = make_production_mesh(multi_pod=multi_pod)
     arch = registry.get(arch_name)
     if extra_cfg:
@@ -91,15 +96,15 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
                 "mesh": "multipod" if multi_pod else "pod",
                 "status": "skipped", "reason": reason}
 
-    t0 = time.time()
+    t0 = now_fn()
     fn, in_sh, out_sh, donate, args = build_step(arch, shape_name, mesh)
     jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                   donate_argnums=donate)
     with mesh:
         lowered = jfn.lower(*args)
-        t_lower = time.time() - t0
+        t_lower = now_fn() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = now_fn() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()

@@ -20,6 +20,14 @@ Static path: requests accumulate into a batch; prefill replays the prompt
 into a max_len cache; decode emits one token per step for the whole batch —
 the queue refills only between generations (head-of-line blocking).
 
+Observability (``--trace``, ``--metrics-out``, ``--feed-cache``): the
+continuous path can record every request's lifecycle spans into a Chrome
+trace-event JSON (load it in Perfetto / ``chrome://tracing``), dump the
+metrics-registry snapshot (counters, histograms, sampled KV/queue time
+series), and feed the observed decode-burst step timings back into the
+profiling cache as measured points — the telemetry leg of ROADMAP's
+online-recalibration item.
+
 On the production mesh, params/caches shard per models/sharding.py — the
 same shardings the dry-run validates for the decode_32k / long_500k cells.
 """
@@ -28,7 +36,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import functools
-import time
 from typing import List
 
 import jax
@@ -37,6 +44,8 @@ import jax.numpy as jnp
 from ..configs import registry
 from ..models import sharding as shard_lib
 from ..models import transformer as T
+from ..obs import Observability, TelemetryFeedback, Tracer, default_clock
+from ..obs.export import write_metrics, write_trace
 from ..serving import (DisaggregatedEngineLoop, EngineLoop, place_phases,
                        synthetic_workload)
 from ..serving import placement as placement_lib
@@ -149,6 +158,22 @@ def main() -> None:
     ap.add_argument("--prefill-slots", type=int, default=None,
                     help="disaggregated path: prefill-engine slots "
                          "(default: --slots)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="continuous path: record per-request lifecycle "
+                         "spans + engine burst/sync spans and write a "
+                         "Chrome trace-event JSON (open in Perfetto or "
+                         "chrome://tracing)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="continuous path: dump the metrics-registry "
+                         "snapshot (counters, histogram summaries, sampled "
+                         "KV-occupancy/queue-depth time series) as JSON")
+    ap.add_argument("--feed-cache", nargs="?", default=None,
+                    const=True, metavar="PATH",
+                    help="continuous path: feed observed decode-burst step "
+                         "timings back into the profiling cache as measured "
+                         "points (default path: the REPRO_PROFILE_CACHE "
+                         "profile cache), so price=\"measured\" learns from "
+                         "this run's traffic")
     args = ap.parse_args()
     if args.placement == "auto" and (args.prefill_engine
                                      or args.decode_engine):
@@ -157,6 +182,10 @@ def main() -> None:
     if args.stream and args.static_batching:
         ap.error("--stream needs the continuous engine (the static server "
                  "only surfaces tokens at batch end)")
+    if args.static_batching and (args.trace or args.metrics_out
+                                 or args.feed_cache):
+        ap.error("--trace/--metrics-out/--feed-cache instrument the "
+                 "continuous engine; drop --static-batching")
 
     arch = registry.get(args.arch)
     cfg = arch.smoke if args.scale == "smoke" else arch.config
@@ -180,7 +209,9 @@ def main() -> None:
         server = Server(cfg, params, mesh, max_len=max_len)
         rng = jax.random.PRNGKey(1)
         done = 0
-        t0 = time.time()
+        # monotonic clock (shared with the serving loops' timing): wall
+        # clock steps under NTP and must not measure intervals
+        t0 = default_clock()
         while done < args.requests:
             n = min(args.batch, args.requests - done)
             rng, k = jax.random.split(rng)
@@ -192,7 +223,7 @@ def main() -> None:
             done += n
             print(f"[serve] batch of {n}: generated {toks.shape} "
                   f"first row: {toks[0, :8].tolist()}", flush=True)
-        dt = time.time() - t0
+        dt = default_clock() - t0
         total_toks = args.requests * args.gen_len
         print(f"served {args.requests} requests, {total_toks} tokens in "
               f"{dt:.1f}s ({total_toks / dt:.1f} tok/s)")
@@ -250,6 +281,14 @@ def main() -> None:
                   f"+{len(d.tokens)} [{toks}]{tag}", flush=True)
 
     step_slo_s = None if args.step_slo_ms is None else args.step_slo_ms / 1e3
+    # one observability bundle for whichever loop runs: tracing only when
+    # asked (NullTracer otherwise — near-zero cost), registry always (it
+    # backs the hand-off ledger and the metrics dump), feedback only with
+    # --feed-cache (it syncs each decode burst to time it)
+    obs = Observability(
+        tracer=Tracer() if args.trace else None,
+        feedback=(TelemetryFeedback(cfg, kv_len=max_len)
+                  if args.feed_cache else None))
     pre_eng = dec_eng = None
     if args.placement == "auto":
         decision = place_phases(
@@ -291,7 +330,8 @@ def main() -> None:
             kv_layout=args.kv_layout,
             decode_total_blocks=args.total_blocks,
             prefill_device=_phase_device(pre_eng),
-            decode_device=_phase_device(dec_eng), step_slo_s=step_slo_s)
+            decode_device=_phase_device(dec_eng), step_slo_s=step_slo_s,
+            obs=obs)
         with mesh:
             metrics = engine.run(requests, on_delta=on_delta)
         for b in engine.batchers:
@@ -310,7 +350,7 @@ def main() -> None:
             cfg, params, n_slots=args.slots, max_seq=max_len,
             kv_layout=args.kv_layout, total_blocks=args.total_blocks,
             device_name=args.device_model, device_model=device_model,
-            step_slo_s=step_slo_s)
+            step_slo_s=step_slo_s, obs=obs)
         with mesh:
             metrics = engine.run(requests, on_delta=on_delta)
         print(f"[serve] token budget {engine.batcher.token_budget}/"
@@ -334,6 +374,27 @@ def main() -> None:
               f"{b.n_rejected} rejected (deadline/oversize), "
               f"{b.n_deferred} deferrals (budget or pool pressure)",
               flush=True)
+
+    # ---- observability exports -------------------------------------------
+    if args.trace:
+        path = write_trace(obs.tracer, args.trace)
+        print(f"[serve] trace: {len(obs.tracer.events)} events "
+              f"({obs.tracer.n_dropped} dropped, {obs.tracer.n_open} "
+              f"unclosed) -> {path}", flush=True)
+    if args.metrics_out:
+        path = write_metrics(obs.registry, args.metrics_out,
+                             extra={"summary": metrics.summary()})
+        print(f"[serve] metrics snapshot -> {path}", flush=True)
+    if args.feed_cache:
+        from ..profiling.cache import DEFAULT_CACHE_PATH, ProfileCache
+        cache_path = (DEFAULT_CACHE_PATH if args.feed_cache is True
+                      else args.feed_cache)
+        cache = ProfileCache.load(cache_path, strict=False)
+        n = obs.feedback.flush(cache)
+        cache.save(cache_path)
+        print(f"[serve] fed {n} telemetry measurements from "
+              f"{obs.feedback.n_bursts} bursts (batch sizes "
+              f"{obs.feedback.batches}) -> {cache_path}", flush=True)
 
 
 if __name__ == "__main__":

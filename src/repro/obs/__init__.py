@@ -1,0 +1,46 @@
+"""Serving-wide observability: tracing, metrics, export, telemetry feedback.
+
+One :class:`Observability` bundle travels through the serving stack
+(driver, engine loops, pools) so every layer instruments against the same
+tracer, metrics registry, and — when enabled — telemetry feedback:
+
+    obs = Observability(tracer=Tracer(), feedback=TelemetryFeedback(...))
+    loop = EngineLoop(cfg, params, pool, obs=obs)
+    driver.run(requests)
+    write_trace(obs.tracer, "trace.json")      # -> Perfetto
+    write_metrics(obs.registry, "metrics.json")
+    obs.feedback.flush(profile_cache)          # -> price="measured"
+
+The default bundle is inert: a :class:`~repro.obs.trace.NullTracer` (every
+instrumentation site guards on ``tracer.enabled``), a live-but-unexported
+:class:`~repro.obs.metrics.MetricsRegistry`, and no feedback — so
+uninstrumented callers pay near-zero cost and no call site needs
+``if obs is not None``.
+
+This package must stay importable without jax or the serving stack
+(feedback lazy-imports both): the launch CLIs read
+:func:`~repro.obs.trace.default_clock` before configuring XLA.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from .feedback import TelemetryFeedback
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .trace import NullTracer, TraceEvent, Tracer, default_clock
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "NullTracer",
+    "Observability", "TelemetryFeedback", "TraceEvent", "Tracer",
+    "default_clock",
+]
+
+
+class Observability:
+    """The bundle every serving layer instruments against."""
+
+    def __init__(self, tracer=None, registry: Optional[MetricsRegistry] = None,
+                 feedback: Optional[TelemetryFeedback] = None):
+        self.tracer = tracer if tracer is not None else NullTracer()
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.feedback = feedback

@@ -165,6 +165,15 @@ class ContinuousBatcher:
         keeping the deferred set bounded by the live queue."""
         self._deferred_rids.discard(rid)
 
+    def priced_step_s(self, n_tokens: int) -> float:
+        """This batcher's modeled per-step wall time at ``n_tokens`` tokens
+        per step — the cost its token budget prices admission against, on
+        its own device model.  The tracer stamps it into admission spans so
+        traces carry priced-vs-observed cost side by side."""
+        return step_time_model(self.cfg, self.pool.max_seq,
+                               max(int(n_tokens), 1), self.device_name,
+                               device=self.device_model)
+
     def admit(self, queue: List[Request], n_active: int,
               now: float) -> AdmissionDecision:
         """Pop admissible requests from `queue` (mutated in place).

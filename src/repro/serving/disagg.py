@@ -29,29 +29,61 @@ is engine-independent.  ``tests/test_placement.py`` asserts it.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
 from typing import Callable, Dict, List, Optional
 
 from ..core import device_models
 from ..core.cost_model import transfer_cost
 from ..models import transformer as T
+from ..obs import MetricsRegistry, Observability, default_clock
 from .batcher import ContinuousBatcher
 from .driver import (OpenLoopDriver, ServeMetrics, StreamDelta, TokenSink,
                      burst_size, sample_pools)
-from .engine_loop import SlotEngine
+from .engine_loop import (SlotEngine, trace_admission, trace_completion,
+                          trace_phase_flip, wire_pool_events)
 from .kv_pool import KVPool
 from .request import Request, RequestState
 
 
-@dataclasses.dataclass
 class HandoffLedger:
-    """What the phase boundary actually moved, plus its modeled price."""
+    """What the phase boundary actually moved, plus its modeled price.
 
-    n_handoffs: int = 0
-    bytes_moved: int = 0
-    modeled_s: float = 0.0
-    modeled_energy_j: float = 0.0
+    A thin view over the metrics registry's ``handoff_*`` counters: the
+    loop's ``.handoff`` attribute keeps its historical read surface
+    (``n_handoffs``, ``bytes_moved``, ``modeled_s``, ``modeled_energy_j``,
+    ``stats()``) while the values themselves live in the same registry
+    snapshot/time-series stream as KV occupancy and queue depth instead of
+    a parallel ad-hoc ledger."""
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        if registry is None:
+            registry = MetricsRegistry()  # standalone view (tests)
+        self._n = registry.counter("handoff_n")
+        self._bytes = registry.counter("handoff_bytes")
+        self._modeled_s = registry.counter("handoff_modeled_s")
+        self._energy_j = registry.counter("handoff_modeled_energy_j")
+
+    def record(self, n_bytes: int, price) -> None:
+        """Account one hand-off: metered bytes + its transfer-cost price."""
+        self._n.inc()
+        self._bytes.inc(n_bytes)
+        self._modeled_s.inc(price.t_transfer)
+        self._energy_j.inc(price.energy_j)
+
+    @property
+    def n_handoffs(self) -> int:
+        return int(self._n.value)
+
+    @property
+    def bytes_moved(self) -> int:
+        return int(self._bytes.value)
+
+    @property
+    def modeled_s(self) -> float:
+        return self._modeled_s.value
+
+    @property
+    def modeled_energy_j(self) -> float:
+        return self._energy_j.value
 
     def stats(self) -> Dict[str, float]:
         return {
@@ -82,17 +114,21 @@ class DisaggregatedEngineLoop:
                  prefill_device: Optional[device_models.DeviceModel] = None,
                  decode_device: Optional[device_models.DeviceModel] = None,
                  step_slo_s: Optional[float] = None,
-                 handoff_link_bw: Optional[float] = None):
+                 handoff_link_bw: Optional[float] = None,
+                 obs: Optional[Observability] = None):
         self.cfg = cfg
         self.kv_layout = kv_layout
+        self.obs = obs if obs is not None else Observability()
         prefill_pool = KVPool(n_prefill_slots, max_seq, block_size=block_size,
                               total_blocks=prefill_total_blocks)
         decode_pool = KVPool(n_decode_slots, max_seq, block_size=block_size,
                              total_blocks=decode_total_blocks)
         self.prefill = SlotEngine(cfg, params, prefill_pool,
-                                  kv_layout=kv_layout)
+                                  kv_layout=kv_layout, name="prefill")
         self.decode = SlotEngine(cfg, params, decode_pool,
-                                 kv_layout=kv_layout)
+                                 kv_layout=kv_layout, name="decode")
+        wire_pool_events(prefill_pool, self.obs.tracer)
+        wire_pool_events(decode_pool, self.obs.tracer)
         self.prefill_batcher = ContinuousBatcher(
             cfg, prefill_pool, phase="prefill",
             device_name=prefill_device_name, device_model=prefill_device,
@@ -106,7 +142,7 @@ class DisaggregatedEngineLoop:
         self._decode_dev = (decode_device
                             or device_models.get(decode_device_name))
         self._handoff_link_bw = handoff_link_bw
-        self.handoff = HandoffLedger()
+        self.handoff = HandoffLedger(registry=self.obs.registry)
         # prefill-complete requests awaiting migration (reset per run)
         self._ready: List[Request] = []
 
@@ -118,6 +154,12 @@ class DisaggregatedEngineLoop:
     def batchers(self):
         return (self.prefill_batcher, self.decode_batcher)
 
+    @property
+    def n_active(self) -> int:
+        """Slots bound across both phase engines (parked ready slots
+        included) — uniform with the colocated loop's ``n_active``."""
+        return self.prefill.n_active + self.decode.n_active
+
     # ---- migration -------------------------------------------------------
     def _migrate(self, req: Request) -> bool:
         """Move a prefill-complete request onto the decode engine.  Returns
@@ -127,6 +169,10 @@ class DisaggregatedEngineLoop:
             return False
         if not self.decode.pool.can_admit(req.total_tokens):
             return False
+        tracer = self.obs.tracer
+        h = (tracer.begin("handoff", track="requests", tid=req.rid,
+                          cat="request")
+             if tracer.enabled else None)
         state = self.prefill.export_slot(req.slot)
         written = self.prefill.pool.lease(req.rid).written_tokens
         self.prefill.release(req)
@@ -142,15 +188,16 @@ class DisaggregatedEngineLoop:
         n_bytes = SlotEngine.state_nbytes(state)
         price = transfer_cost(n_bytes, self._prefill_dev, self._decode_dev,
                               link_bw=self._handoff_link_bw)
-        self.handoff.n_handoffs += 1
-        self.handoff.bytes_moved += n_bytes
-        self.handoff.modeled_s += price.t_transfer
-        self.handoff.modeled_energy_j += price.energy_j
+        self.handoff.record(n_bytes, price)
+        if h is not None:
+            tracer.end(h, args={"bytes": n_bytes,
+                                "modeled_s": price.t_transfer,
+                                "modeled_energy_j": price.energy_j})
         return True
 
     # ---- main loop -------------------------------------------------------
     def run(self, requests: List[Request], *,
-            now_fn: Callable[[], float] = time.perf_counter,
+            now_fn: Callable[[], float] = default_clock,
             max_steps: Optional[int] = None,
             on_delta: Optional[Callable[[StreamDelta], None]] = None
             ) -> ServeMetrics:
@@ -188,8 +235,12 @@ class DisaggregatedEngineLoop:
                     or self.decode.pool.blocks_needed(r.total_tokens)
                     > self.decode.pool.total_blocks):
                 r.state = RequestState.DROPPED
-                metrics.n_dropped += 1
+                metrics.drop()
                 self.prefill_batcher.note_resolved(r.rid)
+                if self.obs.tracer.enabled:
+                    self.obs.tracer.instant(
+                        "dropped", track="requests", tid=r.rid,
+                        cat="request", args={"reason": "never-fits-decode"})
                 queue.pop(i)
                 continue
             i += 1
@@ -201,15 +252,18 @@ class DisaggregatedEngineLoop:
         # still hold prefill slots, so n_active covers them
         decision = self.prefill_batcher.admit(
             queue, self.prefill.n_active, now)
-        metrics.n_dropped += len(decision.dropped)
+        metrics.drop(len(decision.dropped))
         for req in decision.admitted:
             # the first sample lands after plen steps; the rest of the
             # generation belongs to the decode engine
             self.prefill.bind(req, steps_total=req.prompt_len)
+        trace_admission(self.obs, self.prefill_batcher, decision,
+                        self.prefill.n_active)
 
     def dispatch(self, throttle: bool, budget: Optional[int]) -> int:
         # one burst per engine per driver iteration; parked (phase-boundary)
         # prefill slots are active but not burstable
+        tracer, fb = self.obs.tracer, self.obs.feedback
         n = 0
         for eng in (self.prefill, self.decode):
             mask = eng.active & (eng.steps_done < eng.steps_total)
@@ -220,7 +274,24 @@ class DisaggregatedEngineLoop:
                 int(remaining.min()), throttle=throttle,
                 budget=None if budget is None else budget - n)
             if burst > 0:
+                n_burst = int(mask.sum())
+                h = (tracer.begin("burst", track=f"engine:{eng.name}",
+                                  cat="engine",
+                                  args={"steps": burst,
+                                        "n_active": n_burst})
+                     if tracer.enabled else None)
+                t0 = tracer.now() if fb is not None else 0.0
                 eng.dispatch(burst, mask)
+                # only decode bursts feed the cache: they run the per-token
+                # decode network admission prices; prefill bursts do too
+                # mathematically, but attributing them to the decode batch
+                # size would double-count mixed iterations
+                if fb is not None and eng is self.decode:
+                    eng.sync()
+                    fb.observe_burst(n_burst, burst, tracer.now() - t0)
+                if h is not None:
+                    tracer.end(h, args={"synced": (fb is not None
+                                                   and eng is self.decode)})
                 n += burst
         return n
 
@@ -245,6 +316,7 @@ class DisaggregatedEngineLoop:
                 # the burst containing the first sample has been dispatched
                 req.state = RequestState.DECODE
                 req.t_first_dispatch = now
+                trace_phase_flip(self.obs.tracer, req, now)
                 self._ready.append(req)
         for s, req in enumerate(self.decode.slots):
             if req is not None:
@@ -255,13 +327,20 @@ class DisaggregatedEngineLoop:
         sink.drain(self.prefill, clock)
         sink.drain(self.decode, clock)
         # decode completions
+        tracer = self.obs.tracer
         for s, req in enumerate(self.decode.slots):
             if req is None:
                 continue
             if self.decode.steps_done[s] >= self.decode.steps_total[s]:
+                h = (tracer.begin("sync", track="engine:decode",
+                                  cat="engine", args={"kind": "completion"})
+                     if tracer.enabled else None)
                 row = self.decode.pull_output(s)
+                if h is not None:
+                    tracer.end(h)
                 req.state = RequestState.DONE
                 req.t_done = clock()
                 sink.finish(req, row[:req.max_new_tokens], req.t_done)
                 self.decode.release(req)
                 metrics.observe(req)
+                trace_completion(tracer, req)

@@ -42,15 +42,24 @@ Streaming costs one host sync per burst boundary; the completion-pull path
 keeps the fully-pipelined async dispatch chain.  Scheduling is identical
 either way — streamed deltas concatenate to exactly the completion-pull
 rows (asserted in tests/test_driver.py and benchmarks/bench_serving.py).
+
+Observability: the driver reads the loop's :class:`~repro.obs.Observability`
+bundle.  It installs the skew clock into the tracer at run start (every
+trace timestamp lives on the offered-load timeline the metrics use),
+refreshes the registry's gauges each iteration (KV occupancy, queue depth,
+in-flight slots, admission totals) and samples them into the registry's
+time series, and mirrors the same values as Perfetto counter tracks when
+tracing is on.  ``ServeMetrics`` mirrors its per-request observations into
+the registry's histograms so one snapshot carries everything.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from ..obs import NullTracer, Observability, default_clock
 from .request import Request
 
 # with arrivals (or hand-offs) pending, bursts stay short so admission and
@@ -59,8 +68,10 @@ from .request import Request
 BURST_CAP_PENDING = 4
 
 
-def _percentile(xs: List[float], q: float) -> float:
-    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+def _percentile(xs: List[float], q: float) -> Optional[float]:
+    """None (JSON null) when there are no observations — never NaN, which
+    json.dump writes as a non-standard token strict parsers reject."""
+    return float(np.percentile(np.asarray(xs), q)) if xs else None
 
 
 @dataclasses.dataclass
@@ -79,6 +90,10 @@ class ServeMetrics:
     latency_s: List[float] = dataclasses.field(default_factory=list)
     occupancy: List[float] = dataclasses.field(default_factory=list)
     utilization: List[float] = dataclasses.field(default_factory=list)
+    # optional obs.MetricsRegistry: per-request observations mirror into
+    # its histograms/counters so the registry snapshot carries the same
+    # distributions this summary reduces
+    registry: Optional[object] = None
 
     def observe(self, req: Request) -> None:
         self.n_done += 1
@@ -92,8 +107,24 @@ class ServeMetrics:
             self.tpot_s.append(req.tpot)
         if req.t_done is not None:
             self.latency_s.append(req.t_done - req.arrival)
+        reg = self.registry
+        if reg is not None:
+            reg.counter("requests_done").inc()
+            reg.counter("tokens_out").inc(len(req.output))
+            reg.counter("tokens_in").inc(req.prompt_len)
+            if req.ttft is not None:
+                reg.histogram("ttft_s").observe(req.ttft)
+            if req.tpot is not None:
+                reg.histogram("tpot_s").observe(req.tpot)
+            if req.t_done is not None:
+                reg.histogram("latency_s").observe(req.t_done - req.arrival)
 
-    def summary(self) -> Dict[str, float]:
+    def drop(self, n: int = 1) -> None:
+        self.n_dropped += n
+        if self.registry is not None:
+            self.registry.counter("requests_dropped").inc(n)
+
+    def summary(self) -> Dict[str, Optional[float]]:
         dt = max(self.elapsed_s, 1e-9)
         return {
             "requests_done": self.n_done,
@@ -146,9 +177,11 @@ class TokenSink:
     """
 
     def __init__(self, metrics: ServeMetrics,
-                 on_delta: Optional[Callable[[StreamDelta], None]] = None):
+                 on_delta: Optional[Callable[[StreamDelta], None]] = None,
+                 tracer=None):
         self.metrics = metrics
         self.on_delta = on_delta
+        self.tracer = tracer if tracer is not None else NullTracer()
 
     @property
     def streaming(self) -> bool:
@@ -158,7 +191,12 @@ class TokenSink:
         """Sync `engine`'s outputs at the burst boundary and emit deltas."""
         if self.on_delta is None:
             return                       # completion-pull: keep async chain
+        h = (self.tracer.begin("sync", track=f"engine:{engine.name}",
+                               cat="engine", args={"kind": "drain"})
+             if self.tracer.enabled else None)
         rows = engine.pull_outputs()     # host sync: burst results land
+        if h is not None:
+            self.tracer.end(h)
         t = clock()                      # stamped AFTER materialization
         for s, req in enumerate(engine.slots):
             if req is not None:
@@ -174,6 +212,14 @@ class TokenSink:
             # completion-pull delivery: the first token became host-visible
             # just now, with the rest of the row
             req.t_first_token = t
+            self._first_token_instant(req, t)
+
+    def _first_token_instant(self, req: Request, t: float) -> None:
+        if self.tracer.enabled:
+            self.tracer.instant("first_token", track="requests", tid=req.rid,
+                                cat="request", t=t,
+                                args={"ttft_s": req.ttft,
+                                      "ttft_dispatch_s": req.ttft_dispatch})
 
     def _emit(self, req: Request, row: np.ndarray, n_ready: int, t: float,
               done: bool) -> None:
@@ -183,6 +229,7 @@ class TokenSink:
             return
         if new and req.t_first_token is None:
             req.t_first_token = t        # first sample host-visible
+            self._first_token_instant(req, t)
         req.n_streamed = max(req.n_streamed, n_ready)
         self.metrics.tokens_streamed += len(new)
         self.metrics.n_stream_deltas += 1
@@ -231,9 +278,11 @@ class OpenLoopDriver:
 
     def __init__(self, loop):
         self.loop = loop
+        self.obs: Observability = (getattr(loop, "obs", None)
+                                   or Observability())
 
     def run(self, requests: List[Request], *,
-            now_fn: Callable[[], float] = time.perf_counter,
+            now_fn: Callable[[], float] = default_clock,
             max_steps: Optional[int] = None,
             on_delta: Optional[Callable[[StreamDelta], None]] = None
             ) -> ServeMetrics:
@@ -242,14 +291,17 @@ class OpenLoopDriver:
         run streams: every burst boundary syncs the device chain and emits
         newly readable ``(rid, tokens)`` deltas."""
         loop = self.loop
-        metrics = ServeMetrics()
-        sink = TokenSink(metrics, on_delta)
+        obs = self.obs
+        metrics = ServeMetrics(registry=obs.registry)
+        sink = TokenSink(metrics, on_delta, tracer=obs.tracer)
         pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
         queue: List[Request] = []
         loop.start_run()
         t0 = now_fn()
         skew = 0.0                       # idle fast-forward (see below)
         clock = lambda: now_fn() - t0 + skew
+        # every trace timestamp shares the metrics' offered-load timeline
+        obs.tracer.set_clock(clock)
 
         while pending or queue or loop.in_flight():
             now = clock()
@@ -273,7 +325,36 @@ class OpenLoopDriver:
             metrics.n_steps += loop.dispatch(throttle, budget)
             loop.sample(metrics)
             loop.scan(clock, metrics, sink)
+            self._observe_iteration(metrics, queue, pending, clock())
             if max_steps is not None and metrics.n_steps >= max_steps:
                 break
         metrics.elapsed_s = clock()
         return metrics
+
+    def _observe_iteration(self, metrics: ServeMetrics, queue: List[Request],
+                           pending: List[Request], now: float) -> None:
+        """Refresh the registry's gauges from this iteration's state and
+        sample them into the time series (+ Perfetto counter tracks)."""
+        loop, reg = self.loop, self.obs.registry
+        occ = metrics.occupancy[-1] if metrics.occupancy else 0.0
+        util = metrics.utilization[-1] if metrics.utilization else 0.0
+        in_flight = loop.n_active
+        reg.gauge("kv_occupancy").set(occ)
+        reg.gauge("kv_utilization").set(util)
+        reg.gauge("queue_depth").set(len(queue))
+        reg.gauge("pending_arrivals").set(len(pending))
+        reg.gauge("slots_in_flight").set(in_flight)
+        batchers = loop.batchers
+        reg.gauge("admitted_total").set(sum(b.n_admitted for b in batchers))
+        reg.gauge("rejected_total").set(sum(b.n_rejected for b in batchers))
+        reg.gauge("deferred_total").set(
+            sum(b.n_deferred for b in batchers))
+        reg.sample(now)
+        tracer = self.obs.tracer
+        if tracer.enabled:
+            tracer.counter("kv", {"occupancy": occ, "utilization": util},
+                           track="server", t=now)
+            tracer.counter("load", {"queue_depth": len(queue),
+                                    "pending_arrivals": len(pending),
+                                    "slots_in_flight": in_flight},
+                           track="server", t=now)

@@ -34,7 +34,6 @@ from __future__ import annotations
 
 import functools
 import math
-import time
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -42,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import transformer as T
+from ..obs import Observability, default_clock
 from .batcher import ContinuousBatcher
 from .driver import (OpenLoopDriver, ServeMetrics, StreamDelta, TokenSink,
                      burst_size, sample_pools)
@@ -50,6 +50,71 @@ from .request import Request, RequestState
 
 __all__ = ["EngineLoop", "ServeMetrics", "SlotEngine", "StreamDelta",
            "TokenSink"]
+
+
+# ---- shared trace instrumentation (colocated + disaggregated loops) -------
+
+def wire_pool_events(pool: KVPool, tracer) -> None:
+    """Surface the pool's block-lease events as per-request trace instants
+    (``kv_alloc``/``kv_free`` on the request's own tid)."""
+    if not tracer.enabled:
+        return
+
+    def on_event(kind, rid, n_blocks):
+        tracer.instant("kv_" + kind, track="requests", tid=rid, cat="kv",
+                       args={"blocks": n_blocks})
+
+    pool.on_event = on_event
+
+
+def trace_admission(obs, batcher, decision, n_active: int) -> None:
+    """Close each admitted request's ``queued`` span (arrival -> admission)
+    with the priced cost the batcher admitted it against, and mark drops."""
+    tracer = obs.tracer
+    if not tracer.enabled:
+        return
+    if decision.admitted:
+        priced = batcher.priced_step_s(n_active)
+        for req in decision.admitted:
+            req.priced_step_s = priced
+            tracer.span("queued", req.arrival, req.t_admitted,
+                        track="requests", tid=req.rid, cat="request",
+                        args={"priced_step_s": priced,
+                              "token_budget": batcher.token_budget,
+                              "phase": batcher.phase,
+                              "blocks": batcher.pool.blocks_needed(
+                                  req.total_tokens)})
+    for req in decision.dropped:
+        tracer.instant("dropped", track="requests", tid=req.rid,
+                       cat="request",
+                       args={"reason": "deadline-or-never-fits"})
+
+
+def trace_phase_flip(tracer, req, now: float) -> None:
+    """Prefill span: admission -> the first decode burst's dispatch."""
+    if tracer.enabled:
+        tracer.span("prefill", req.t_admitted, now, track="requests",
+                    tid=req.rid, cat="request",
+                    args={"prompt_len": req.prompt_len})
+
+
+def trace_completion(tracer, req) -> None:
+    """Decode span (dispatch -> done, priced vs observed per-step cost) +
+    the ``done`` instant."""
+    if not tracer.enabled:
+        return
+    if req.t_first_dispatch is not None and req.t_done is not None:
+        dur = req.t_done - req.t_first_dispatch
+        steps = max(req.max_new_tokens - 1, 1)
+        tracer.span("decode", req.t_first_dispatch, req.t_done,
+                    track="requests", tid=req.rid, cat="request",
+                    args={"priced_step_s": req.priced_step_s,
+                          "observed_step_s": dur / steps,
+                          "tokens": len(req.output)})
+    tracer.instant("done", track="requests", tid=req.rid, cat="request",
+                   t=req.t_done,
+                   args={"latency_s": (None if req.t_done is None
+                                       else req.t_done - req.arrival)})
 
 
 def _fused_step(step_fn, params, cfg, cache, prompts, plens, last_tok,
@@ -95,13 +160,14 @@ class SlotEngine:
     MAX_BUCKET = 32
 
     def __init__(self, cfg: T.ModelConfig, params, pool: KVPool, *,
-                 kv_layout: str = "dense"):
+                 kv_layout: str = "dense", name: str = "engine"):
         if kv_layout not in ("dense", "paged"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
         self.cfg = cfg
         self.params = params
         self.pool = pool
         self.kv_layout = kv_layout
+        self.name = name                 # labels this engine's trace track
         n_slots = pool.n_slots
         if kv_layout == "paged":
             self.cache = T.init_slot_cache_paged(
@@ -208,6 +274,13 @@ class SlotEngine:
         for s, req in enumerate(self.slots):
             if req is not None and active_np[s]:
                 self.pool.note_write(req.rid, burst)
+
+    def sync(self) -> None:
+        """Block until every dispatched burst has executed.  Waits only —
+        nothing is read or written — so outputs are bit-identical with or
+        without the sync; the telemetry feedback path calls this so burst
+        timings measure device wall time, not enqueue time."""
+        jax.block_until_ready((self.cache, self._last_tok, self._out_buf))
 
     def pull_output(self, slot: int) -> np.ndarray:
         """Sync and read one slot's sampled-token row."""
@@ -399,9 +472,11 @@ class EngineLoop:
                  device_name: str = "tpu-v5e",
                  device_model=None,
                  step_slo_s: Optional[float] = None,
-                 token_budget: Optional[int] = None):
+                 token_budget: Optional[int] = None,
+                 obs: Optional[Observability] = None):
         self.cfg = cfg
         self.kv_layout = kv_layout
+        self.obs = obs if obs is not None else Observability()
         self.pool = KVPool(n_slots, max_seq, block_size=block_size,
                            total_blocks=total_blocks)
         self.batcher = ContinuousBatcher(
@@ -409,7 +484,8 @@ class EngineLoop:
             device_model=device_model, step_slo_s=step_slo_s,
             token_budget=token_budget)
         self.engine = SlotEngine(cfg, params, self.pool,
-                                 kv_layout=kv_layout)
+                                 kv_layout=kv_layout, name="colocated")
+        wire_pool_events(self.pool, self.obs.tracer)
 
     def warmup(self) -> None:
         self.engine.warmup()
@@ -418,8 +494,13 @@ class EngineLoop:
     def n_active(self) -> int:
         return self.engine.n_active
 
+    @property
+    def batchers(self):
+        """Admission batchers, uniform with the disaggregated loop's."""
+        return (self.batcher,)
+
     def run(self, requests: List[Request], *,
-            now_fn: Callable[[], float] = time.perf_counter,
+            now_fn: Callable[[], float] = default_clock,
             max_steps: Optional[int] = None,
             on_delta: Optional[Callable[[StreamDelta], None]] = None
             ) -> ServeMetrics:
@@ -447,13 +528,15 @@ class EngineLoop:
     def admit(self, queue: List[Request], now: float,
               metrics: ServeMetrics) -> None:
         decision = self.batcher.admit(queue, self.engine.n_active, now)
-        metrics.n_dropped += len(decision.dropped)
+        metrics.drop(len(decision.dropped))
         for req in decision.admitted:
             # greedy decoding with known lengths: completion is
             # deterministic — the final sample lands after
             # plen + gen - 1 active steps
             self.engine.bind(req, steps_total=(req.prompt_len
                                                + req.max_new_tokens - 1))
+        trace_admission(self.obs, self.batcher, decision,
+                        self.engine.n_active)
 
     def dispatch(self, throttle: bool, budget: Optional[int]) -> int:
         # burst: dispatch steps to the next completion boundary without
@@ -464,7 +547,20 @@ class EngineLoop:
                            throttle=throttle, budget=budget)
         if burst <= 0:
             return 0
+        tracer, fb = self.obs.tracer, self.obs.feedback
+        n_active = eng.n_active
+        h = (tracer.begin("burst", track=f"engine:{eng.name}", cat="engine",
+                          args={"steps": burst, "n_active": n_active})
+             if tracer.enabled else None)
+        t0 = tracer.now() if fb is not None else 0.0
         eng.dispatch(burst, eng.active)
+        if fb is not None:
+            # telemetry feedback wants device wall time per step, so wait
+            # for the burst (a pure wait: outputs stay bit-identical)
+            eng.sync()
+            fb.observe_burst(n_active, burst, tracer.now() - t0)
+        if h is not None:
+            tracer.end(h, args={"synced": fb is not None})
         return burst
 
     def sample(self, metrics: ServeMetrics) -> None:
@@ -475,6 +571,7 @@ class EngineLoop:
     def scan(self, clock: Callable[[], float], metrics: ServeMetrics,
              sink: TokenSink) -> None:
         eng = self.engine
+        tracer = self.obs.tracer
         now = clock()
         for s, req in enumerate(eng.slots):
             if req is None:
@@ -486,15 +583,22 @@ class EngineLoop:
                 # (host-visible stamping happens in the sink)
                 req.state = RequestState.DECODE
                 req.t_first_dispatch = now
+                trace_phase_flip(tracer, req, now)
         sink.drain(eng, clock)           # streaming: burst-boundary sync
         for s, req in enumerate(eng.slots):
             if req is None:
                 continue
             if eng.steps_done[s] >= eng.steps_total[s]:
                 # completion boundary: sync and pull this slot's tokens
+                h = (tracer.begin("sync", track=f"engine:{eng.name}",
+                                  cat="engine", args={"kind": "completion"})
+                     if tracer.enabled else None)
                 row = eng.pull_output(s)
+                if h is not None:
+                    tracer.end(h)
                 req.state = RequestState.DONE
                 req.t_done = clock()
                 sink.finish(req, row[:req.max_new_tokens], req.t_done)
                 eng.release(req)
                 metrics.observe(req)
+                trace_completion(tracer, req)

@@ -58,6 +58,11 @@ class KVPool:
         self._free_blocks = list(range(self.total_blocks - 1, -1, -1))
         self._leases: Dict[int, SlotLease] = {}
         self._block_owner: Dict[int, int] = {}
+        # lease-event observer: called as on_event(kind, rid, n_blocks) with
+        # kind in {"alloc", "free"}.  The serving loops install a tracer
+        # callback here so KV block leases appear as per-request trace
+        # instants; None (default) costs one attribute check per event.
+        self.on_event = None
 
     # ---- capacity queries ------------------------------------------------
     def blocks_needed(self, n_tokens: int) -> int:
@@ -98,6 +103,8 @@ class KVPool:
             self._block_owner[b] = rid
         self._leases[rid] = SlotLease(rid=rid, slot=slot, blocks=blocks,
                                       reserved_tokens=n_tokens)
+        if self.on_event is not None:
+            self.on_event("alloc", rid, len(blocks))
         return slot
 
     def note_write(self, rid: int, n_tokens: int = 1) -> None:
@@ -118,6 +125,8 @@ class KVPool:
             del self._block_owner[b]
             self._free_blocks.append(b)
         self._free_slots.append(lease.slot)
+        if self.on_event is not None:
+            self.on_event("free", rid, len(lease.blocks))
         return lease.slot
 
     def lease(self, rid: int) -> SlotLease:

@@ -51,6 +51,10 @@ class Request:
     # quantify the dispatch-vs-delivery gap)
     t_first_dispatch: Optional[float] = None
     t_done: Optional[float] = None
+    # modeled per-step cost at admission time (what the batcher's token
+    # budget priced this request against); the tracer pairs it with the
+    # observed per-step time in the decode span
+    priced_step_s: Optional[float] = None
 
     @property
     def prompt_len(self) -> int:

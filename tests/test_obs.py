@@ -1,0 +1,412 @@
+"""Observability layer: tracer, metrics registry, export, telemetry feedback.
+
+The contracts this file pins:
+  * tracing is passive — a traced run's outputs, step counts and admission
+    accounting are bit-identical to an untraced run, and the NullTracer
+    records nothing while keeping the shared time source functional;
+  * a traced run covers the whole request lifecycle with balanced spans on
+    the injected deterministic clock (queued/prefill/decode per rid, burst
+    and sync on the engine tracks, first_token/done instants, kv block
+    lease events, the hand-off span in disaggregated mode) and the trace
+    is reproducible event-for-event under the same virtual clock;
+  * the exporter emits strict JSON Chrome trace-event / metrics files
+    (no NaN tokens) that ``check_regression --trace`` validates;
+  * ``ServeMetrics`` mirrors into the registry, the ``HandoffLedger`` is a
+    thin view over registry counters, and zero-completion summaries report
+    ``None`` percentiles, never NaN;
+  * fed burst telemetry round-trips: cache entries validate against the
+    profiling-cache schema and ``MeasuredPricer`` retrieves them under the
+    exact (fingerprint, engine, environment) key admission pricing uses,
+    with per-layer medians summing back to the observed step time.
+"""
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.check_regression import validate_trace
+from repro.core.engines import XLA_ENGINE
+from repro.models import transformer as T
+from repro.obs import (MetricsRegistry, NullTracer, Observability,
+                       TelemetryFeedback, Tracer)
+from repro.obs.export import chrome_trace, write_metrics, write_trace
+from repro.profiling.cache import (SCHEMA_VERSION, ProfileCache,
+                                   validate_dict)
+from repro.profiling.pricer import MeasuredPricer
+from repro.serving import (DisaggregatedEngineLoop, EngineLoop, Request,
+                           ServeMetrics, synthetic_workload)
+from repro.serving.batcher import decode_network_spec
+from repro.serving.disagg import HandoffLedger
+
+TINY = T.ModelConfig(
+    name="obs-tiny", n_layers=3, d_model=32, n_heads=4, n_kv_heads=2,
+    d_ff=64, vocab=64, attention_impl="dot", remat=False)
+
+MAX_LEN = 8 + 12
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return T.init_params(jax.random.PRNGKey(0), TINY)
+
+
+def _virtual_clock():
+    t = [0.0]
+
+    def now():
+        t[0] += 1e-3
+        return t[0]
+
+    return now
+
+
+def _workload(n=9, seed=11, gen_lens=(1, 3, 6, 12)):
+    return synthetic_workload(n, rate=1e9, vocab=TINY.vocab,
+                              prompt_lens=(4, 8), gen_lens=gen_lens,
+                              seed=seed)
+
+
+def _traced_run(tiny_params, *, disagg=False, n=9):
+    obs = Observability(tracer=Tracer())
+    reqs = _workload(n)
+    if disagg:
+        loop = DisaggregatedEngineLoop(TINY, tiny_params, n_prefill_slots=2,
+                                       n_decode_slots=3, max_seq=MAX_LEN,
+                                       obs=obs)
+    else:
+        loop = EngineLoop(TINY, tiny_params, n_slots=3, max_seq=MAX_LEN,
+                          obs=obs)
+    m = loop.run(reqs, now_fn=_virtual_clock())
+    return obs, reqs, m, loop
+
+
+# ------------------------------------------------------------ tracer core
+def test_tracer_ring_buffer_bounded():
+    tr = Tracer(capacity=8)
+    for i in range(20):
+        tr.instant(f"e{i}", track="server", t=float(i))
+    assert len(tr) == 8
+    assert tr.n_dropped == 12
+    # ring semantics: the oldest events fell out, the newest survive
+    assert [e.name for e in tr.events] == [f"e{i}" for i in range(12, 20)]
+
+
+def test_tracer_spans_handles_and_clock():
+    clock = _virtual_clock()
+    tr = Tracer(clock)
+    h = tr.begin("burst", track="engine:colocated", cat="engine",
+                 args={"steps": 4})
+    h2 = tr.begin("sync", track="engine:colocated")
+    assert tr.n_open == 2
+    tr.end(h2)
+    tr.end(h, args={"synced": True})
+    assert tr.n_open == 0
+    (sp,) = tr.spans("burst")
+    assert sp.ph == "X" and sp.dur >= 0
+    assert sp.args == {"steps": 4, "synced": True}   # end() merges args
+    # explicit-stamp spans land where the caller says, clamped to dur >= 0
+    tr.span("queued", 5.0, 4.0, track="requests", tid=7)
+    (q,) = tr.spans("queued")
+    assert q.ts == 5.0 and q.dur == 0.0 and q.tid == 7
+    # same-named tracks share a pid; new names get fresh ones
+    assert tr.track("requests") == tr.track("requests") != tr.track("server")
+
+
+def test_null_tracer_is_inert_but_keeps_time():
+    nt = NullTracer()
+    nt.set_clock(_virtual_clock())
+    assert not nt.enabled
+    t1, t2 = nt.now(), nt.now()
+    assert t2 > t1                       # the shared time source still works
+    h = nt.begin("x", track="y")
+    nt.end(h)
+    nt.instant("z", track="w")
+    nt.counter("c", {"v": 1.0}, track="server")
+    nt.span("s", 0.0, 1.0, track="y")
+    assert len(nt) == 0 and nt.spans() == [] and nt.n_open == 0
+    assert nt.track("anything") == 0
+
+
+# ------------------------------------------------- traced serving lifecycle
+def test_traced_run_covers_request_lifecycle(tiny_params):
+    obs, reqs, m, loop = _traced_run(tiny_params)
+    tr = obs.tracer
+    rids = {r.rid for r in reqs}
+    assert m.n_done == 9 and tr.n_open == 0 and tr.n_dropped == 0
+    # one lifecycle span of each stage per request, on the requests track
+    for name in ("queued", "prefill", "decode"):
+        spans = tr.spans(name)
+        assert {e.tid for e in spans} == rids, name
+        assert all(e.pid == tr.tracks["requests"] for e in spans)
+    # admission records the priced per-step cost it admitted against
+    for q in tr.spans("queued"):
+        assert q.args["priced_step_s"] > 0
+    # decode spans carry priced vs observed step cost for the comparison
+    for d in tr.spans("decode"):
+        assert d.args["priced_step_s"] > 0 and d.args["observed_step_s"] >= 0
+    # first_token + done instants per request; kv lease events balance
+    insts = [e for e in tr.events if e.ph == "i"]
+    by_name = {}
+    for e in insts:
+        by_name.setdefault(e.name, set()).add(e.tid)
+    assert by_name["first_token"] == by_name["done"] == rids
+    assert by_name["kv_alloc"] == by_name["kv_free"] == rids
+    # engine-level spans on their own track
+    assert tr.spans("burst") and "engine:colocated" in tr.tracks
+    # per-request ordering on the shared clock: admission precedes the
+    # phase flip precedes completion
+    ends = {}
+    for name in ("queued", "prefill", "decode"):
+        for e in tr.spans(name):
+            ends.setdefault(e.tid, {})[name] = e.ts + e.dur
+    for rid, e in ends.items():
+        assert e["queued"] <= e["prefill"] <= e["decode"], rid
+
+
+def test_traced_run_is_deterministic_under_virtual_clock(tiny_params):
+    def key(obs):
+        return [(e.name, e.ph, round(e.ts, 9), e.pid, e.tid,
+                 round(e.dur or 0.0, 9)) for e in obs.tracer.events]
+
+    a, _, _, _ = _traced_run(tiny_params)
+    b, _, _, _ = _traced_run(tiny_params)
+    assert key(a) == key(b)              # golden: same clock, same trace
+
+
+def test_tracing_preserves_outputs_and_scheduling(tiny_params):
+    plain_reqs = _workload()
+    plain = EngineLoop(TINY, tiny_params, n_slots=3, max_seq=MAX_LEN)
+    m_plain = plain.run(plain_reqs, now_fn=_virtual_clock())
+    obs, traced_reqs, m_traced, loop = _traced_run(tiny_params)
+    assert {r.rid: r.output for r in traced_reqs} == \
+        {r.rid: r.output for r in plain_reqs}
+    assert m_traced.n_steps == m_plain.n_steps
+    assert loop.batcher.n_admitted == plain.batcher.n_admitted
+    # the untraced loop defaults to a NullTracer: nothing recorded
+    assert isinstance(plain.obs.tracer, NullTracer)
+
+
+def test_traced_disaggregated_handoff_spans(tiny_params):
+    obs, reqs, m, dis = _traced_run(tiny_params, disagg=True)
+    tr = obs.tracer
+    rids = {r.rid for r in reqs}
+    assert m.n_done == 9 and tr.n_open == 0
+    handoffs = tr.spans("handoff")
+    assert {e.tid for e in handoffs} == rids
+    for h in handoffs:
+        assert h.args["bytes"] > 0 and h.args["modeled_s"] >= 0
+    # the ledger is a view over the same registry the spans accompany
+    assert dis.handoff.n_handoffs == len(handoffs) == 9
+    assert dis.handoff.bytes_moved == sum(h.args["bytes"] for h in handoffs)
+    assert obs.registry.counters["handoff_n"].value == 9
+    # both phase engines traced their bursts on their own tracks
+    assert {"engine:prefill", "engine:decode"} <= set(tr.tracks)
+    # a block lease on each phase's pool per request
+    allocs = [e for e in tr.events if e.ph == "i" and e.name == "kv_alloc"]
+    assert len(allocs) == 2 * len(rids)
+
+
+def test_dropped_request_emits_instant_and_counter(tiny_params):
+    # a prompt that can never fit the pool is dropped at admission
+    big = Request(rid=0, prompt=np.zeros((30,), np.int32), max_new_tokens=4)
+    ok = Request(rid=1, prompt=np.arange(4, dtype=np.int32),
+                 max_new_tokens=2)
+    obs = Observability(tracer=Tracer())
+    eng = EngineLoop(TINY, tiny_params, n_slots=2, max_seq=16, obs=obs)
+    m = eng.run([big, ok], now_fn=_virtual_clock())
+    assert m.n_done == 1 and m.n_dropped == 1
+    drops = [e for e in obs.tracer.events
+             if e.ph == "i" and e.name == "dropped"]
+    assert [e.tid for e in drops] == [0]
+    assert "reason" in drops[0].args
+    assert obs.registry.counters["requests_dropped"].value == 1
+
+
+# ------------------------------------------------------- metrics registry
+def test_driver_samples_gauges_into_series(tiny_params):
+    obs, reqs, m, _ = _traced_run(tiny_params)
+    reg = obs.registry
+    assert reg.counters["requests_done"].value == 9
+    assert reg.counters["tokens_out"].value == m.tokens_out
+    assert reg.histograms["ttft_s"].count == 9
+    assert reg.n_samples == len(reg.series) > 0
+    # the sampled occupancy trajectory covers the run, not just its mean
+    occ = reg.series_values("kv_occupancy")
+    assert len(occ) == reg.n_samples and max(occ) > 0
+    # admission totals land as gauges refreshed per iteration
+    assert reg.gauges["admitted_total"].value == 9
+    snap = reg.snapshot()
+    json.dumps(snap, allow_nan=False)    # JSON-safe tree
+    assert snap["series_dropped"] == 0
+
+
+def test_servemetrics_mirrors_registry():
+    reg = MetricsRegistry()
+    m = ServeMetrics(registry=reg)
+    r = Request(rid=3, prompt=np.arange(4, dtype=np.int32),
+                max_new_tokens=2, arrival=1.0)
+    r.t_first_dispatch, r.t_first_token, r.t_done = 1.5, 2.0, 3.0
+    r.output = [5, 6]
+    m.observe(r)
+    m.drop(3)
+    assert reg.counters["requests_done"].value == 1
+    assert reg.counters["tokens_out"].value == 2
+    assert reg.counters["requests_dropped"].value == 3
+    assert reg.histograms["ttft_s"].summary()["p50"] == pytest.approx(1.0)
+    assert reg.histograms["latency_s"].summary()["p50"] == pytest.approx(2.0)
+    assert m.n_done == 1 and m.n_dropped == 3
+
+
+def test_handoff_ledger_is_registry_view():
+    import types
+    reg = MetricsRegistry()
+    led = HandoffLedger(registry=reg)
+    price = types.SimpleNamespace(t_transfer=0.25, energy_j=1.5)
+    led.record(100, price)
+    led.record(50, price)
+    assert led.n_handoffs == 2 and led.bytes_moved == 150
+    assert led.modeled_s == pytest.approx(0.5)
+    assert led.modeled_energy_j == pytest.approx(3.0)
+    # the same numbers are visible through the registry snapshot
+    snap = reg.snapshot()
+    assert snap["counters"]["handoff_bytes"] == 150
+    assert led.stats() == {"n_handoffs": 2, "bytes_moved": 150,
+                           "modeled_s": 0.5, "modeled_energy_j": 3.0}
+
+
+def test_zero_completion_summary_is_none_not_nan():
+    s = ServeMetrics().summary()
+    for k in ("ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "latency_p50_s",
+              "ttft_dispatch_p50_s"):
+        assert s[k] is None              # regression: these were NaN
+    json.dumps(s, allow_nan=False)       # and the report stays strict JSON
+    empty = MetricsRegistry().histogram("h").summary()
+    assert empty["count"] == 0 and empty["p50"] is None
+
+
+# ---------------------------------------------------------------- export
+def test_chrome_export_strict_json(tmp_path, tiny_params):
+    obs, reqs, m, _ = _traced_run(tiny_params)
+    trace = chrome_trace(obs.tracer)
+    # strict JSON: round-trips with NaN/Infinity literals rejected
+    text = json.dumps(trace, allow_nan=False)
+    loaded = json.loads(text, parse_constant=lambda c: pytest.fail(c))
+    events = loaded["traceEvents"]
+    meta = [e for e in events if e["ph"] == "M"]
+    assert {e["args"]["name"] for e in meta} == set(obs.tracer.tracks)
+    for e in events:
+        if e["ph"] == "X":
+            assert e["dur"] >= 0 and math.isfinite(e["ts"])
+        elif e["ph"] == "i":
+            assert e["s"] == "t"
+    assert loaded["otherData"]["n_open"] == 0
+    # the file writers hold the same contract
+    tpath = write_trace(obs.tracer, str(tmp_path / "trace.json"))
+    mpath = write_metrics(obs.registry, str(tmp_path / "metrics.json"),
+                          extra={"summary": m.summary()})
+    with open(mpath) as f:
+        metrics = json.load(f, parse_constant=lambda c: pytest.fail(c))
+    assert metrics["summary"]["requests_done"] == 9
+    assert metrics["counters"]["requests_done"] == 9
+    assert json.load(open(tpath))["traceEvents"]
+
+
+def test_check_regression_trace_gate(tmp_path, tiny_params):
+    colo, _, _, _ = _traced_run(tiny_params)
+    dis, _, _, _ = _traced_run(tiny_params, disagg=True)
+    cpath = write_trace(colo.tracer, str(tmp_path / "colo.json"))
+    dpath = write_trace(dis.tracer, str(tmp_path / "dis.json"))
+    assert all(ok for _, ok, _ in validate_trace(cpath))
+    assert all(ok for _, ok, _ in validate_trace(dpath,
+                                                 require_handoff=True))
+    # a colocated trace has no hand-off span: the stricter gate fails
+    checks = dict((n, ok) for n, ok, _ in
+                  validate_trace(cpath, require_handoff=True))
+    assert checks["trace covers the request lifecycle"] is False
+    # non-strict JSON (a NaN token) fails the first gate
+    bad = tmp_path / "bad.json"
+    with open(bad, "w") as f:
+        json.dump({"traceEvents": [{"name": "x", "ph": "X",
+                                    "ts": float("nan"), "pid": 1, "tid": 0,
+                                    "dur": 1.0}]}, f)   # allow_nan default
+    assert validate_trace(str(bad))[0][1] is False
+    # an empty trace fails too
+    empty = tmp_path / "empty.json"
+    empty.write_text('{"traceEvents": []}')
+    assert not all(ok for _, ok, _ in validate_trace(str(empty)))
+
+
+# ---------------------------------------------------- telemetry feedback
+def test_feedback_roundtrip_through_measured_pricer():
+    fb = TelemetryFeedback(TINY, kv_len=MAX_LEN)
+    fb.observe_burst(3, 4, 0.04)         # 10 ms/step at batch 3
+    fb.observe_burst(3, 2, 0.018)        # 9 ms/step
+    fb.observe_burst(0, 4, 0.04)         # guarded: no tokens
+    fb.observe_burst(3, 4, 0.0)          # guarded: no elapsed time
+    assert fb.batches == [3] and fb.n_bursts == 2
+    cache = ProfileCache()
+    n = fb.flush(cache)
+    assert n == len(fb.measurements()) > 0
+    # fed entries pass the cache schema check, keys and all
+    assert validate_dict({"schema": SCHEMA_VERSION,
+                          "entries": cache.entries}) == []
+    for m in cache.measurements():
+        assert m["source"] == "serving-telemetry"
+    # MeasuredPricer (cache-only) retrieves every priced layer at the
+    # exact key admission uses, and per-layer medians sum back to the
+    # observed per-step median
+    pricer = MeasuredPricer(cache, measure_on_miss=False, autosave=False)
+    net = decode_network_spec(TINY, MAX_LEN)
+    total = 0.0
+    for spec in net:
+        got = pricer.measurement_for(spec, XLA_ENGINE, batch=3,
+                                     dtype=jnp.float32)
+        if spec.flops(3) <= 0:
+            assert got is None           # gather layers are never fed
+            continue
+        assert got is not None and got.t_median > 0
+        total += got.t_median
+    assert total == pytest.approx(0.0095)   # median of (10ms, 9ms) steps
+    assert pricer.hits > 0 and pricer.misses == 0
+    # an unobserved batch size is a clean miss, not a stale hit
+    spec = next(s for s in net if s.flops(3) > 0)
+    assert pricer.measurement_for(spec, XLA_ENGINE, batch=5,
+                                  dtype=jnp.float32) is None
+
+
+def test_serving_run_feeds_cache_bit_identically(tiny_params):
+    plain_reqs = _workload()
+    plain = EngineLoop(TINY, tiny_params, n_slots=3, max_seq=MAX_LEN)
+    plain.run(plain_reqs, now_fn=_virtual_clock())
+
+    fb = TelemetryFeedback(TINY, kv_len=MAX_LEN)
+    obs = Observability(feedback=fb)
+    fed_reqs = _workload()
+    eng = EngineLoop(TINY, tiny_params, n_slots=3, max_seq=MAX_LEN, obs=obs)
+    m = eng.run(fed_reqs, now_fn=_virtual_clock())
+    assert m.n_done == 9
+    # the burst sync only waits — outputs stay bit-identical
+    assert {r.rid: r.output for r in fed_reqs} == \
+        {r.rid: r.output for r in plain_reqs}
+    assert fb.n_bursts > 0 and fb.batches   # observed real bursts
+    assert all(1 <= b <= 3 for b in fb.batches)
+    cache = ProfileCache()
+    assert fb.flush(cache) > 0
+    pricer = MeasuredPricer(cache, measure_on_miss=False, autosave=False)
+    spec = next(s for s in decode_network_spec(TINY, MAX_LEN)
+                if s.flops(max(fb.batches)) > 0)
+    got = pricer.measurement_for(spec, XLA_ENGINE, batch=max(fb.batches),
+                                 dtype=jnp.float32)
+    assert got is not None and got.t_median > 0
+
+
+def test_observability_defaults():
+    obs = Observability()
+    assert isinstance(obs.tracer, NullTracer)
+    assert isinstance(obs.registry, MetricsRegistry)
+    assert obs.feedback is None
+    traced = Observability(tracer=Tracer())
+    assert traced.tracer.enabled and traced.registry is not obs.registry

@@ -21,6 +21,11 @@ The ``observability`` section prices the tracing layer: NullTracer and
 fully traced throughput relative to the untraced baseline (the NullTracer
 ratio is the gated overhead bound) plus bit-identity of every traced run
 and trace-health counts (spans balanced, lifecycle coverage, ring drops).
+The ``adaptive`` section closes the loop: under an injected admission
+mispricing that clamps the token budget to 1, the watchdog's mid-run
+re-pricing must recover throughput and TTFT (bit-identically — admission
+policy never changes outputs), and tracer+watchdog throughput must stay
+within the gated overhead of tracer-only.
 
 Static batching groups requests by prompt length (the legacy server is
 rectangular), waits for a full batch to arrive, and decodes every batch to
@@ -453,6 +458,116 @@ def run_observability(cfg, params, baselines: Dict, *, n_requests: int,
     return section
 
 
+def run_adaptive(cfg, params, baselines: Dict, *, n_requests: int,
+                 slots: int, max_len: int, seed: int) -> Dict:
+    """The watchdog control loop under an injected pricing error, plus the
+    overhead of running it.
+
+    Drifted-cost scenario: admission is priced on a device model de-rated
+    (``drift_scaled_device``) until the analytic step time at batch 2 is
+    4x the step SLO, so the static token budget clamps to 1 and the loop
+    serializes.  The real hardware is far faster than that price, so the
+    watchdog's EWMA of observed/priced crosses the gate, the driver hands
+    the alert to ``on_drift``, and the batcher re-prices from telemetry
+    (ratio-scaled analytic first, fitted latency(batch) curve once two
+    batch sizes were observed) — the budget refits against the same SLO
+    and the run recovers full batching mid-flight.  Gated: re-pricing must
+    improve saturation throughput AND p50 TTFT, at least one alert and one
+    re-price must fire, and both runs must stay bit-identical to the
+    untouched baseline (admission policy must never change outputs).
+
+    Overhead: tracer+watchdog vs tracer-only throughput on the undrifted
+    configuration, interleaved best-of-``_OBS_REPS`` like the
+    observability section (the watchdog syncs each burst to time it — that
+    sync is the cost being gated)."""
+    from repro.core import device_models
+    from repro.obs import PerfWatchdog
+    from repro.serving.batcher import step_time_model
+    from repro.serving.placement import drift_scaled_device
+
+    _, base_reqs = baselines["colocated"]
+    base_out = {r.rid: r.output for r in base_reqs}
+
+    # de-rate the pricing device until batch 2 breaks the step SLO: the
+    # static budget pins to 1 while the hardware could batch freely
+    slo = 0.1
+    base_dev = device_models.get("tpu-v5e")
+    factor = 4.0 * slo / step_time_model(cfg, max_len, 2, device=base_dev)
+    drifted = drift_scaled_device(base_dev, factor)
+
+    def _run(watchdog):
+        obs = (Observability(watchdog=watchdog)
+               if watchdog is not None else None)
+        eng = EngineLoop(cfg, params, n_slots=slots, max_seq=max_len,
+                         device_model=drifted, step_slo_s=slo, obs=obs)
+        eng.warmup()                     # timing the schedule, not jit
+        reqs = _workload(n_requests, 1e9, cfg.vocab, seed)
+        m = eng.run(reqs)
+        return eng, m, {r.rid: r.output for r in reqs}
+
+    off_eng, m_off, out_off = _run(None)
+    wd = PerfWatchdog()
+    on_eng, m_on, out_on = _run(wd)
+
+    # overhead leg: same undrifted tracer-only vs tracer+watchdog engines,
+    # reps interleaved so both sample the same host-load windows
+    def _mk(obs):
+        eng = EngineLoop(cfg, params, n_slots=slots, max_seq=max_len,
+                         obs=obs)
+        eng.warmup()
+        return eng
+    engines = {"traced": _mk(Observability(tracer=Tracer())),
+               "watchdog": _mk(Observability(tracer=Tracer(),
+                                             watchdog=PerfWatchdog()))}
+    best: Dict[str, float] = {}
+    outs: Dict[str, Dict[int, List[int]]] = {}
+    for _ in range(_OBS_REPS):
+        for key, eng in engines.items():
+            reqs = _workload(n_requests, 1e9, cfg.vocab, seed)
+            m = eng.run(reqs)
+            best[key] = max(best.get(key, 0.0), m.summary()["tok_per_s"])
+            rows = {r.rid: r.output for r in reqs}
+            assert outs.setdefault(key, rows) == rows   # deterministic reps
+
+    off, on = m_off.summary(), m_on.summary()
+    section = {
+        "scenario": {
+            "step_slo_s": slo,
+            "misprice_factor": factor,
+            "priced_device": drifted.name,
+        },
+        "static_priced": off,
+        "adaptive": on,
+        "tok_per_s_ratio": on["tok_per_s"] / off["tok_per_s"],
+        # >1: re-pricing cut the median time-to-first-token
+        "ttft_p50_ratio": off["ttft_p50_s"] / on["ttft_p50_s"],
+        "n_alerts": len(wd.alerts),
+        "n_reprices": len(wd.reprices),
+        "token_budget_static": off_eng.batcher.token_budget,
+        "token_budget_final": on_eng.batcher.token_budget,
+        "price_source_final": on_eng.batcher.price_source,
+        "overhead_ratio_watchdog": best["watchdog"] / best["traced"],
+        "bit_identical_static": base_out == out_off,
+        "bit_identical_adaptive": base_out == out_on,
+        "bit_identical_overhead": outs["traced"] == outs["watchdog"]
+                                  == base_out,
+    }
+    section["all_identical"] = (section["bit_identical_static"]
+                                and section["bit_identical_adaptive"]
+                                and section["bit_identical_overhead"])
+    print(f"[bench_serving] adaptive: drifted-cost {on['tok_per_s']:.1f} "
+          f"tok/s watchdog-on vs {off['tok_per_s']:.1f} off "
+          f"({section['tok_per_s_ratio']:.2f}x, ttft p50 "
+          f"{section['ttft_p50_ratio']:.2f}x better), budget "
+          f"{section['token_budget_static']} -> "
+          f"{section['token_budget_final']} "
+          f"({section['price_source_final']}, {section['n_alerts']} alerts, "
+          f"{section['n_reprices']} reprices); watchdog overhead "
+          f"{section['overhead_ratio_watchdog']:.3f}x traced; "
+          f"bit_identical={section['all_identical']}", flush=True)
+    return section
+
+
 def run_bench(*, n_requests: int, slots: int, rates: List[float],
               seed: int = 7) -> Dict:
     cfg = SMOKE_CFG
@@ -500,6 +615,9 @@ def run_bench(*, n_requests: int, slots: int, rates: List[float],
     results["observability"] = run_observability(
         cfg, params, baselines, n_requests=n_requests, slots=slots,
         max_len=max_len, seed=seed)
+    results["adaptive"] = run_adaptive(
+        cfg, params, baselines, n_requests=n_requests, slots=slots,
+        max_len=max_len, seed=seed)
     results["max_speedup"] = max(l["speedup_tok_per_s"]
                                  for l in results["loads"])
     results["all_bit_identical"] = all(
@@ -507,7 +625,8 @@ def run_bench(*, n_requests: int, slots: int, rates: List[float],
         + [results["disaggregation"]["bit_identical"],
            results["paged"]["all_identical"],
            results["streaming"]["all_identical"],
-           results["observability"]["all_identical"]])
+           results["observability"]["all_identical"],
+           results["adaptive"]["all_identical"]])
     return results
 
 

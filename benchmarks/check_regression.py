@@ -37,11 +37,19 @@ ratio at or above the overhead floor.  Every required stat is checked
 with :func:`_num`, which rejects NaN/inf — a zero-completion run's
 ``None`` percentiles fail the gate instead of sailing through as NaN.
 
+The ``adaptive`` section must be present and well-formed: under the
+bench's injected admission mispricing the watchdog must have fired
+(>=1 alert, >=1 re-price, token budget raised) and improved both
+saturation throughput and p50 TTFT bit-identically, and tracer+watchdog
+throughput must hold the same overhead floor as the NullTracer bound.
+
 ``--trace trace.json`` gates a Chrome trace-event file written by
 ``serve --trace`` (``--fresh`` becomes optional): strict JSON (NaN and
 Infinity literals rejected), non-empty well-formed ``traceEvents``, no
 unclosed spans, and at least one span/instant per request-lifecycle
-stage (``--require-handoff`` adds the disaggregated hand-off span).
+stage (``--require-handoff`` adds the disaggregated hand-off span;
+``--require-watchdog`` adds the drift_alert + reprice instants a
+``serve --watchdog --misprice`` run must emit).
 """
 from __future__ import annotations
 
@@ -267,13 +275,86 @@ def validate_observability(fresh: dict) -> List[Tuple[str, bool, str]]:
     return checks
 
 
+# the adaptive (watchdog) section: numeric/bool schema plus the gated
+# control-loop outcomes — re-pricing must recover throughput AND TTFT
+# under the injected mispricing, with at least one alert + re-price, and
+# tracer+watchdog throughput must hold the same overhead floor the
+# NullTracer bound uses
+_ADAPTIVE_NUMERIC_KEYS = ("tok_per_s_ratio", "ttft_p50_ratio", "n_alerts",
+                          "n_reprices", "token_budget_static",
+                          "token_budget_final", "overhead_ratio_watchdog")
+_ADAPTIVE_BOOL_KEYS = ("bit_identical_static", "bit_identical_adaptive",
+                       "bit_identical_overhead", "all_identical")
+
+
+def validate_adaptive(fresh: dict) -> List[Tuple[str, bool, str]]:
+    """Schema + correctness checks for the ``adaptive`` section: the
+    watchdog's mid-run re-pricing must beat the statically mispriced run
+    on saturation throughput and p50 TTFT (bit-identically — admission
+    policy never changes outputs), must actually have fired (>=1 alert,
+    >=1 re-price, budget raised), and the tracer+watchdog overhead ratio
+    must stay at or above :data:`OBS_OVERHEAD_FLOOR`."""
+    checks: List[Tuple[str, bool, str]] = []
+    section = fresh.get("adaptive")
+    if not isinstance(section, dict):
+        return [("adaptive section present", False,
+                 f"missing or not an object: {type(section).__name__}")]
+    problems: List[str] = []
+    for k in _ADAPTIVE_NUMERIC_KEYS:
+        if not _num(section.get(k)):
+            problems.append(f"{k}: not a finite number")
+    for k in _ADAPTIVE_BOOL_KEYS:
+        if not isinstance(section.get(k), bool):
+            problems.append(f"{k}: not a bool")
+    for run in ("static_priced", "adaptive"):
+        summ = section.get(run)
+        if not isinstance(summ, dict):
+            problems.append(f"{run}: missing summary")
+            continue
+        for k in ("tok_per_s", "ttft_p50_s", "tokens_out", "requests_done"):
+            if not _num(summ.get(k)):
+                problems.append(f"{run}.{k}: not a finite number")
+    checks.append(("adaptive section schema", not problems,
+                   "; ".join(problems) if problems else
+                   "static + adaptive summaries well-formed"))
+    if problems:
+        return checks
+    checks.append((
+        "watchdog control loop fired",
+        section["n_alerts"] >= 1 and section["n_reprices"] >= 1
+        and section["token_budget_final"] > section["token_budget_static"],
+        f"{section['n_alerts']} alerts, {section['n_reprices']} reprices, "
+        f"budget {section['token_budget_static']} -> "
+        f"{section['token_budget_final']} "
+        f"({section.get('price_source_final')})"))
+    checks.append((
+        "re-pricing improves the drifted-cost run",
+        section["tok_per_s_ratio"] > 1.0 and section["ttft_p50_ratio"] > 1.0,
+        f"tok/s {section['tok_per_s_ratio']:.2f}x, ttft p50 "
+        f"{section['ttft_p50_ratio']:.2f}x better with the watchdog on"))
+    checks.append((
+        "adaptive outputs bit-identical",
+        section["all_identical"],
+        ", ".join(f"{k}={section[k]}" for k in _ADAPTIVE_BOOL_KEYS[:3])))
+    checks.append((
+        "watchdog overhead within budget",
+        section["overhead_ratio_watchdog"] >= OBS_OVERHEAD_FLOOR,
+        f"tracer+watchdog {section['overhead_ratio_watchdog']:.3f}x of "
+        f"tracer-only tok/s (floor {OBS_OVERHEAD_FLOOR})"))
+    return checks
+
+
 # every request lifecycle stage a serve --trace file must cover: complete
 # ("X") spans and instant ("i") markers emitted by the obs tracer
 _TRACE_REQUIRED_SPANS = ("queued", "prefill", "decode", "burst", "sync")
 _TRACE_REQUIRED_INSTANTS = ("first_token", "done")
+# what a serve --watchdog --misprice trace must additionally carry: the
+# detection and action instants of the re-pricing control loop
+_TRACE_WATCHDOG_INSTANTS = ("drift_alert", "reprice")
 
 
-def validate_trace(path: str, *, require_handoff: bool = False
+def validate_trace(path: str, *, require_handoff: bool = False,
+                   require_watchdog: bool = False
                    ) -> List[Tuple[str, bool, str]]:
     """Schema gate for a Chrome trace-event file written by
     ``serve --trace``: strict JSON, well-formed events, no unclosed
@@ -325,8 +406,11 @@ def validate_trace(path: str, *, require_handoff: bool = False
     required = list(_TRACE_REQUIRED_SPANS)
     if require_handoff:
         required.append("handoff")
+    required_instants = list(_TRACE_REQUIRED_INSTANTS)
+    if require_watchdog:
+        required_instants.extend(_TRACE_WATCHDOG_INSTANTS)
     missing = ([f"span:{n}" for n in required if not spans.get(n)]
-               + [f"instant:{n}" for n in _TRACE_REQUIRED_INSTANTS
+               + [f"instant:{n}" for n in required_instants
                   if not instants.get(n)])
     checks.append(("trace covers the request lifecycle", not missing,
                    "missing " + ", ".join(missing) if missing else
@@ -415,6 +499,7 @@ def compare(baseline: dict, fresh: dict, *, threshold: float,
     checks.extend(validate_paged(fresh))
     checks.extend(validate_streaming(fresh))
     checks.extend(validate_observability(fresh))
+    checks.extend(validate_adaptive(fresh))
     return checks
 
 
@@ -442,6 +527,11 @@ def main() -> None:
     ap.add_argument("--require-handoff", action="store_true",
                     help="with --trace: require the disaggregated "
                          "hand-off span")
+    ap.add_argument("--require-watchdog", action="store_true",
+                    help="with --trace: require the watchdog's "
+                         "drift_alert + reprice instants (a serve "
+                         "--watchdog --misprice run must have detected "
+                         "and corrected the injected drift)")
     args = ap.parse_args()
     if args.fresh is None and args.trace is None:
         ap.error("at least one of --fresh / --trace is required")
@@ -458,8 +548,9 @@ def main() -> None:
                               baselines_dir=args.baselines_dir,
                               record_absolute=args.record_absolute))
     if args.trace is not None:
-        checks.extend(validate_trace(args.trace,
-                                     require_handoff=args.require_handoff))
+        checks.extend(validate_trace(
+            args.trace, require_handoff=args.require_handoff,
+            require_watchdog=args.require_watchdog))
 
     failed = False
     for name, ok, detail in checks:

@@ -22,10 +22,41 @@ Derived metrics exactly as §IV.B defines them:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 from .device_models import DeviceModel
 from .layer_model import LayerSpec, NetworkSpec
+
+
+def piecewise_interp(xs: Sequence[float], ys: Sequence[float], x: float) -> float:
+    """Piecewise-linear interpolation through measured (x, y) knots.
+
+    The analytic model above prices a step as a sum of per-layer roofline
+    terms that scale linearly in FLOPs between any two batch sizes; measured
+    latency(batch) curves do not obey that (kernel launch floors, cache
+    cliffs, bucket re-jits).  When telemetry supplies real knots, interpolate
+    between them instead of assuming linear-FLOP scaling — outside the
+    measured range, extrapolate along the nearest segment's slope, clamped
+    non-negative.
+
+    ``xs`` must be strictly increasing with at least two knots; shorter
+    inputs have no interior to interpolate and callers fall back to the
+    analytic model.
+    """
+    if len(xs) != len(ys) or len(xs) < 2:
+        raise ValueError("piecewise_interp needs >= 2 matching knots")
+    if x <= xs[0]:
+        lo, hi = 0, 1
+    elif x >= xs[-1]:
+        lo, hi = len(xs) - 2, len(xs) - 1
+    else:
+        hi = next(i for i, v in enumerate(xs) if v >= x)
+        lo = hi - 1
+    span = xs[hi] - xs[lo]
+    if span <= 0:
+        raise ValueError("piecewise_interp knots must be strictly increasing")
+    frac = (x - xs[lo]) / span
+    return max(ys[lo] + frac * (ys[hi] - ys[lo]), 0.0)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -23,10 +23,18 @@ the queue refills only between generations (head-of-line blocking).
 Observability (``--trace``, ``--metrics-out``, ``--feed-cache``): the
 continuous path can record every request's lifecycle spans into a Chrome
 trace-event JSON (load it in Perfetto / ``chrome://tracing``), dump the
-metrics-registry snapshot (counters, histograms, sampled KV/queue time
-series), and feed the observed decode-burst step timings back into the
+metrics-registry snapshot (counters, histogram summaries, sampled KV/queue
+time series), and feed the observed decode-burst step timings back into the
 profiling cache as measured points — the telemetry leg of ROADMAP's
 online-recalibration item.
+
+Watchdog (``--watchdog``, ``--slo-report``): the online performance
+watchdog compares each burst's observed step time against the admission
+price, fits piecewise-linear latency(batch) curves from the telemetry, and
+— when the EWMA divergence crosses the gate — re-prices admission mid-run
+(and records fresh placement advice on the disaggregated path).
+``--misprice FACTOR`` injects a known pricing error for CI; ``--slo-report``
+prints per-request-class TTFT/TPOT SLO attainment afterwards.
 
 On the production mesh, params/caches shard per models/sharding.py — the
 same shardings the dry-run validates for the decode_32k / long_500k cells.
@@ -174,6 +182,29 @@ def main() -> None:
                          "points (default path: the REPRO_PROFILE_CACHE "
                          "profile cache), so price=\"measured\" learns from "
                          "this run's traffic")
+    ap.add_argument("--watchdog", action="store_true",
+                    help="continuous path: run the online performance "
+                         "watchdog — compare observed burst step times "
+                         "against the priced cost model, fit latency(batch) "
+                         "curves from telemetry, and re-price admission "
+                         "mid-run when the EWMA divergence crosses the gate")
+    ap.add_argument("--drift-gate", type=float, default=None,
+                    help="watchdog: observed/priced EWMA ratio (or its "
+                         "inverse) that raises a DriftAlert (default 1.5)")
+    ap.add_argument("--misprice", type=float, default=None, metavar="FACTOR",
+                    help="debug/CI: scale the admission device model's "
+                         "throughput down by FACTOR (drift_scaled_device) "
+                         "so the priced step time is FACTOR x too slow — "
+                         "an injected mispricing the watchdog must detect "
+                         "and correct")
+    ap.add_argument("--slo-report", action="store_true",
+                    help="continuous path: print per-request-class "
+                         "(short/medium/long by generation length) "
+                         "TTFT/TPOT SLO attainment after the run")
+    ap.add_argument("--slo-ttft-ms", type=float, default=2000.0,
+                    help="--slo-report: time-to-first-token objective (ms)")
+    ap.add_argument("--slo-tpot-ms", type=float, default=200.0,
+                    help="--slo-report: time-per-output-token objective (ms)")
     args = ap.parse_args()
     if args.placement == "auto" and (args.prefill_engine
                                      or args.decode_engine):
@@ -183,9 +214,12 @@ def main() -> None:
         ap.error("--stream needs the continuous engine (the static server "
                  "only surfaces tokens at batch end)")
     if args.static_batching and (args.trace or args.metrics_out
-                                 or args.feed_cache):
-        ap.error("--trace/--metrics-out/--feed-cache instrument the "
-                 "continuous engine; drop --static-batching")
+                                 or args.feed_cache or args.watchdog
+                                 or args.slo_report):
+        ap.error("--trace/--metrics-out/--feed-cache/--watchdog/--slo-report "
+                 "instrument the continuous engine; drop --static-batching")
+    if args.misprice is not None and args.misprice <= 0:
+        ap.error("--misprice must be > 0")
 
     arch = registry.get(args.arch)
     cfg = arch.smoke if args.scale == "smoke" else arch.config
@@ -285,10 +319,27 @@ def main() -> None:
     # asked (NullTracer otherwise — near-zero cost), registry always (it
     # backs the hand-off ledger and the metrics dump), feedback only with
     # --feed-cache (it syncs each decode burst to time it)
+    watchdog = None
+    if args.watchdog:
+        from ..obs import PerfWatchdog
+        watchdog = (PerfWatchdog() if args.drift_gate is None
+                    else PerfWatchdog(drift_gate=args.drift_gate))
     obs = Observability(
         tracer=Tracer() if args.trace else None,
         feedback=(TelemetryFeedback(cfg, kv_len=max_len)
-                  if args.feed_cache else None))
+                  if args.feed_cache else None),
+        watchdog=watchdog)
+
+    def _misprice(dev):
+        """Inject an admission-pricing error for watchdog CI/debug runs."""
+        if args.misprice is None:
+            return dev
+        from ..core import device_models
+        from ..serving.placement import drift_scaled_device
+        if dev is None:
+            dev = device_models.get(args.device_model)
+        return drift_scaled_device(dev, args.misprice)
+
     pre_eng = dec_eng = None
     if args.placement == "auto":
         decision = place_phases(
@@ -329,9 +380,10 @@ def main() -> None:
             n_decode_slots=args.slots, max_seq=max_len,
             kv_layout=args.kv_layout,
             decode_total_blocks=args.total_blocks,
-            prefill_device=_phase_device(pre_eng),
-            decode_device=_phase_device(dec_eng), step_slo_s=step_slo_s,
-            obs=obs)
+            prefill_device=_misprice(_phase_device(pre_eng)),
+            decode_device=_misprice(_phase_device(dec_eng)),
+            step_slo_s=step_slo_s, obs=obs,
+            placement_engine_name=dec_eng.name)
         with mesh:
             metrics = engine.run(requests, on_delta=on_delta)
         for b in engine.batchers:
@@ -349,7 +401,8 @@ def main() -> None:
         engine = EngineLoop(
             cfg, params, n_slots=args.slots, max_seq=max_len,
             kv_layout=args.kv_layout, total_blocks=args.total_blocks,
-            device_name=args.device_model, device_model=device_model,
+            device_name=args.device_model,
+            device_model=_misprice(device_model),
             step_slo_s=step_slo_s, obs=obs)
         with mesh:
             metrics = engine.run(requests, on_delta=on_delta)
@@ -375,6 +428,35 @@ def main() -> None:
               f"{b.n_deferred} deferrals (budget or pool pressure)",
               flush=True)
 
+    # ---- watchdog + SLO reporting ----------------------------------------
+    if watchdog is not None:
+        rep = watchdog.report()
+        print(f"[serve] watchdog: {len(rep['alerts'])} drift alerts, "
+              f"{len(rep['reprices'])} re-price events, sync cadence "
+              f"{rep['sync_cadence']}", flush=True)
+        for a in rep["alerts"]:
+            print(f"[serve] watchdog.alert: {a['engine']}/{a['phase']} "
+                  f"{a['direction']} ewma={a['ewma_ratio']:.2f} "
+                  f"(priced {a['priced_step_s']*1e3:.2f}ms, observed "
+                  f"{a['observed_step_s']*1e3:.2f}ms)", flush=True)
+        for r in rep["reprices"]:
+            print(f"[serve] watchdog.reprice: {r['engine']}/{r['phase']} "
+                  f"pricing={r.get('pricing')} token_budget "
+                  f"{r.get('token_budget_old')} -> {r.get('token_budget')}",
+                  flush=True)
+        for b in batchers:
+            if b.n_reprices:
+                print(f"[serve] admission [{b.phase}] re-priced "
+                      f"{b.n_reprices}x ({b.price_source}); final budget "
+                      f"{b.token_budget}/{b.pool.n_slots}", flush=True)
+    if args.slo_report:
+        from ..obs.watchdog import format_slo_report, slo_attainment
+        rows = slo_attainment(requests, ttft_slo_s=args.slo_ttft_ms / 1e3,
+                              tpot_slo_s=args.slo_tpot_ms / 1e3)
+        print(format_slo_report(rows, ttft_slo_s=args.slo_ttft_ms / 1e3,
+                                tpot_slo_s=args.slo_tpot_ms / 1e3),
+              flush=True)
+
     # ---- observability exports -------------------------------------------
     if args.trace:
         path = write_trace(obs.tracer, args.trace)
@@ -382,8 +464,12 @@ def main() -> None:
               f"({obs.tracer.n_dropped} dropped, {obs.tracer.n_open} "
               f"unclosed) -> {path}", flush=True)
     if args.metrics_out:
+        extra = {"summary": metrics.summary()}
+        if watchdog is not None:
+            extra["watchdog"] = watchdog.report()
         path = write_metrics(obs.registry, args.metrics_out,
-                             extra={"summary": metrics.summary()})
+                             tracer=obs.tracer if args.trace else None,
+                             extra=extra)
         print(f"[serve] metrics snapshot -> {path}", flush=True)
     if args.feed_cache:
         from ..profiling.cache import DEFAULT_CACHE_PATH, ProfileCache

@@ -2,7 +2,9 @@
 
 One :class:`Observability` bundle travels through the serving stack
 (driver, engine loops, pools) so every layer instruments against the same
-tracer, metrics registry, and — when enabled — telemetry feedback:
+tracer, metrics registry, and — when enabled — telemetry feedback and the
+:class:`~repro.obs.watchdog.PerfWatchdog` that re-prices admission when
+observed step costs drift from the admission price:
 
     obs = Observability(tracer=Tracer(), feedback=TelemetryFeedback(...))
     loop = EngineLoop(cfg, params, pool, obs=obs)
@@ -25,14 +27,17 @@ from __future__ import annotations
 
 from typing import Optional
 
+from .curves import LatencyCurve, fit_latency_curve
 from .feedback import TelemetryFeedback
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry
 from .trace import NullTracer, TraceEvent, Tracer, default_clock
+from .watchdog import DriftAlert, PerfWatchdog
 
 __all__ = [
-    "Counter", "Gauge", "Histogram", "MetricsRegistry", "NullTracer",
-    "Observability", "TelemetryFeedback", "TraceEvent", "Tracer",
-    "default_clock",
+    "Counter", "DriftAlert", "Gauge", "Histogram", "LatencyCurve",
+    "MetricsRegistry", "NullTracer", "Observability", "PerfWatchdog",
+    "TelemetryFeedback", "TraceEvent", "Tracer", "default_clock",
+    "fit_latency_curve",
 ]
 
 
@@ -40,7 +45,11 @@ class Observability:
     """The bundle every serving layer instruments against."""
 
     def __init__(self, tracer=None, registry: Optional[MetricsRegistry] = None,
-                 feedback: Optional[TelemetryFeedback] = None):
+                 feedback: Optional[TelemetryFeedback] = None,
+                 watchdog: Optional[PerfWatchdog] = None):
         self.tracer = tracer if tracer is not None else NullTracer()
         self.registry = registry if registry is not None else MetricsRegistry()
         self.feedback = feedback
+        self.watchdog = watchdog
+        if watchdog is not None:
+            watchdog.bind(self.registry, self.tracer)

@@ -18,7 +18,7 @@ from __future__ import annotations
 import json
 from typing import Optional
 
-__all__ = ["chrome_trace", "write_metrics", "write_trace"]
+__all__ = ["chrome_trace", "trace_health", "write_metrics", "write_trace"]
 
 _US = 1e6
 
@@ -70,11 +70,29 @@ def write_trace(tracer, path: str) -> str:
     return path
 
 
-def write_metrics(registry, path: str, *, extra: Optional[dict] = None) -> str:
+def trace_health(tracer) -> dict:
+    """Ring-buffer accounting for the metrics snapshot.
+
+    A saturated ring silently drops the oldest spans, so an exported trace
+    can *look* complete while missing the run's start; surfacing
+    ``n_dropped`` (and still-open span count) next to the metrics makes
+    the truncation visible without opening the trace itself.
+    """
+    return {"n_events": len(tracer.events),
+            "n_dropped": tracer.n_dropped,
+            "n_open": tracer.n_open,
+            "enabled": bool(tracer.enabled)}
+
+
+def write_metrics(registry, path: str, *, tracer=None,
+                  extra: Optional[dict] = None) -> str:
     """Dump the registry snapshot (counters, gauges, histogram summaries,
-    sampled time series) as strict JSON; ``extra`` merges top-level keys
-    (e.g. the run's ServeMetrics summary)."""
+    sampled time series) as strict JSON; ``tracer`` adds its ring-buffer
+    health under ``trace``; ``extra`` merges top-level keys (e.g. the
+    run's ServeMetrics summary)."""
     data = registry.snapshot()
+    if tracer is not None:
+        data["trace"] = trace_health(tracer)
     if extra:
         data.update(_safe(extra))
     with open(path, "w") as f:

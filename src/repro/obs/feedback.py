@@ -89,6 +89,11 @@ class TelemetryFeedback:
                 if fl <= 0:
                     continue             # gather layers: nothing to price
                 share = fl / total
+                if float(q50) * share <= 0.0:
+                    # a tiny FLOP share can underflow the apportioned time
+                    # to 0.0; a 0-cost cache entry would price the layer as
+                    # free everywhere MeasuredPricer looks it up — skip it
+                    continue
                 out.append({
                     "layer": spec.name, "kind": spec.kind,
                     "engine": self.engine, "batch": int(batch),

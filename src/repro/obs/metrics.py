@@ -75,11 +75,14 @@ class Histogram:
         """Percentile summary; ``None`` (JSON null) when empty — never NaN,
         so a zero-completion run still serializes as strict JSON."""
         if not self.samples:
-            return {"count": self.count, "mean": None, "p50": None,
-                    "p99": None, "min": None, "max": None}
+            return {"count": self.count, "n_samples": 0, "mean": None,
+                    "p50": None, "p99": None, "min": None, "max": None}
         xs = np.asarray(self.samples)
         return {
             "count": self.count,
+            # retained reservoir size: < count means the ring truncated and
+            # the percentiles below only describe the newest samples
+            "n_samples": len(self.samples),
             "mean": float(xs.mean()),
             "p50": float(np.percentile(xs, 50)),
             "p99": float(np.percentile(xs, 99)),
@@ -142,6 +145,7 @@ class MetricsRegistry:
                            for n, h in sorted(self.histograms.items())},
             "series": [dict(p) for p in self.series],
             "n_samples": self.n_samples,
+            "series_len": len(self.series),
             "series_dropped": self.n_samples - len(self.series),
         }
 

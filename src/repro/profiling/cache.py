@@ -149,12 +149,19 @@ class ProfileCache:
             {"jax_version": m["jax_version"], "backend": m["backend"]})] = m
 
     def measurements(self, *, engine: Optional[str] = None,
-                     stale: bool = False) -> List[dict]:
-        """Entries for the current environment (all envs when ``stale``)."""
+                     stale: bool = False,
+                     source: Optional[str] = None) -> List[dict]:
+        """Entries for the current environment (all envs when ``stale``).
+
+        ``source`` filters on the provenance tag (``"serving-telemetry"``
+        for entries fed by :class:`~repro.obs.feedback.TelemetryFeedback`;
+        bench-harness entries carry no tag)."""
         env = environment()
         out = []
         for m in self.entries.values():
             if engine is not None and m["engine"] != engine:
+                continue
+            if source is not None and m.get("source") != source:
                 continue
             if not stale and (m["jax_version"] != env["jax_version"]
                               or m["backend"] != env["backend"]):

@@ -57,7 +57,10 @@ class MeasuredPricer:
         dtype_name = jnp.dtype(dtype).name
         hit = self.cache.get(spec, engine.name, batch=batch,
                              dtype=dtype_name)
-        if hit is not None:
+        # a degenerate 0-cost entry (e.g. underflowed telemetry
+        # apportionment) would price the layer as free and poison every
+        # achieved-FLOPs fit downstream — treat it as a miss, not a hit
+        if hit is not None and float(hit.get("t_median", 0.0)) > 0.0:
             self.hits += 1
             return bench.Measurement.from_dict(hit)
         if not self.measure_on_miss:

@@ -115,6 +115,7 @@ class DisaggregatedEngineLoop:
                  decode_device: Optional[device_models.DeviceModel] = None,
                  step_slo_s: Optional[float] = None,
                  handoff_link_bw: Optional[float] = None,
+                 placement_engine_name: str = "xla",
                  obs: Optional[Observability] = None):
         self.cfg = cfg
         self.kv_layout = kv_layout
@@ -142,6 +143,9 @@ class DisaggregatedEngineLoop:
         self._decode_dev = (decode_device
                             or device_models.get(decode_device_name))
         self._handoff_link_bw = handoff_link_bw
+        # the DSE candidate the in-process SlotEngines actually execute on;
+        # the watchdog's mid-run placement re-run de-rates this engine
+        self._placement_engine_name = placement_engine_name
         self.handoff = HandoffLedger(registry=self.obs.registry)
         # prefill-complete requests awaiting migration (reset per run)
         self._ready: List[Request] = []
@@ -263,9 +267,10 @@ class DisaggregatedEngineLoop:
     def dispatch(self, throttle: bool, budget: Optional[int]) -> int:
         # one burst per engine per driver iteration; parked (phase-boundary)
         # prefill slots are active but not burstable
-        tracer, fb = self.obs.tracer, self.obs.feedback
+        tracer, fb, wd = self.obs.tracer, self.obs.feedback, self.obs.watchdog
         n = 0
-        for eng in (self.prefill, self.decode):
+        for eng, batcher in ((self.prefill, self.prefill_batcher),
+                             (self.decode, self.decode_batcher)):
             mask = eng.active & (eng.steps_done < eng.steps_total)
             if not mask.any():
                 continue
@@ -280,20 +285,79 @@ class DisaggregatedEngineLoop:
                                   args={"steps": burst,
                                         "n_active": n_burst})
                      if tracer.enabled else None)
-                t0 = tracer.now() if fb is not None else 0.0
-                eng.dispatch(burst, mask)
                 # only decode bursts feed the cache: they run the per-token
                 # decode network admission prices; prefill bursts do too
                 # mathematically, but attributing them to the decode batch
-                # size would double-count mixed iterations
-                if fb is not None and eng is self.decode:
+                # size would double-count mixed iterations.  The watchdog
+                # watches BOTH phases — each stream is keyed by its own
+                # (engine, phase) batcher pricing, so there is no mixing
+                feed = fb is not None and eng is self.decode
+                timed = feed or wd is not None
+                t0 = tracer.now() if timed else 0.0
+                eng.dispatch(burst, mask)
+                if timed:
                     eng.sync()
-                    fb.observe_burst(n_burst, burst, tracer.now() - t0)
+                    dt = tracer.now() - t0
+                    if feed:
+                        fb.observe_burst(n_burst, burst, dt)
+                    if wd is not None:
+                        wd.observe_burst(
+                            eng.name, batcher.phase, n_tokens=n_burst,
+                            steps=burst, elapsed_s=dt,
+                            priced_step_s=batcher.priced_step_s(n_burst))
                 if h is not None:
-                    tracer.end(h, args={"synced": (fb is not None
-                                                   and eng is self.decode)})
+                    tracer.end(h, args={"synced": timed})
                 n += burst
         return n
+
+    def on_drift(self, alert, watchdog) -> None:
+        """Watchdog action leg, disaggregated: re-price the drifted phase's
+        admission AND re-run the placement DSE with that phase's device
+        de-rated by the observed divergence.
+
+        Both phase SlotEngines live in one process, so the fresh
+        :func:`~repro.serving.placement.place_phases` decision is recorded
+        as *advice* (trace ``reprice`` args + the watchdog report) rather
+        than a hot engine swap; what actually changes mid-run is the
+        batcher's pricing and token budget.
+        """
+        batcher = {"prefill": self.prefill_batcher,
+                   "decode": self.decode_batcher}.get(alert.phase)
+        if batcher is None:
+            return
+        fn, source = watchdog.step_time_fn(
+            alert.engine, alert.phase, batcher.analytic_step_s)
+        if source == "analytic":
+            return
+        detail = batcher.reprice(fn, source=source)
+        detail.update(self._replace_placement(alert))
+        watchdog.note_reprice(alert, detail)
+
+    def _replace_placement(self, alert) -> Dict:
+        """Re-run ``place_phases`` with the drifted device de-rated by the
+        observed ratio; returns JSON-safe advice for the re-price event."""
+        from .placement import drift_scaled_device, place_phases
+        dev = (self._prefill_dev if alert.phase == "prefill"
+               else self._decode_dev)
+        try:
+            scaled = drift_scaled_device(dev, alert.ewma_ratio)
+            pool = self.decode.pool
+            prompt_len = max(pool.max_seq // 2, 1)
+            decision = place_phases(
+                self.cfg, objective="latency", prompt_len=prompt_len,
+                gen_len=max(pool.max_seq - prompt_len, 1),
+                batch=pool.n_slots, link_bw=self._handoff_link_bw,
+                device_overrides={self._placement_engine_name: scaled})
+            return {"placement_advice": {
+                        "prefill_engine": decision.prefill_engine,
+                        "decode_engine": decision.decode_engine,
+                        "colocated": decision.colocated,
+                        "objective": decision.objective,
+                        "value": float(decision.best.value)},
+                    "drifted_device": scaled.name}
+        except Exception as e:             # advice must never kill the run
+            return {"placement_advice": None,
+                    "placement_error": repr(e)}
 
     def sample(self, metrics: ServeMetrics) -> None:
         # capacity-weighted across the two pools: occupancy by total_blocks,

@@ -207,6 +207,26 @@ def phase_cost(cfg: ModelConfig, engine: ExecutionEngine, phase: str, *,
                      flops=flops * steps, peak_power_w=peak)
 
 
+def drift_scaled_device(device, ratio: float):
+    """De-rate (ratio > 1) or up-rate (ratio < 1) a device model by an
+    observed/priced time ratio.
+
+    This is how the watchdog re-enters the placement DSE mid-run: a phase
+    whose observed step cost runs ``ratio``x its price behaves like a
+    device whose every rate is ``1/ratio`` of nominal, so the DSE re-prices
+    the pair against what the hardware is actually delivering."""
+    if ratio <= 0.0:
+        raise ValueError("drift ratio must be > 0")
+    return dataclasses.replace(
+        device,
+        name=f"{device.name}-drift{ratio:.3g}x",
+        peak_flops=device.peak_flops / ratio,
+        mem_bw=device.mem_bw / ratio,
+        throughput={k: v / ratio for k, v in device.throughput.items()},
+        throughput_bwd={k: v / ratio
+                        for k, v in device.throughput_bwd.items()})
+
+
 # ---------------------------------------------------------------------------
 # The DSE itself
 # ---------------------------------------------------------------------------
@@ -241,6 +261,7 @@ def place_phases(
     price: str = "analytic",
     cache_path: Optional[str] = None,
     link_bw: Optional[float] = None,
+    device_overrides: Optional[Dict[str, object]] = None,
 ) -> PlacementDecision:
     """Enumerate (prefill, decode) engine pairs and pick per objective.
 
@@ -250,6 +271,9 @@ def place_phases(
     phase.  ``price="measured"`` hooks into ``repro.profiling``: buildable
     engines with cached measurements are priced on calibrated models.
     ``link_bw`` overrides the hand-off bandwidth (e.g. a measured rate).
+    ``device_overrides`` maps engine name -> device model and wins over
+    the measured calibration — the watchdog re-runs the DSE mid-run with
+    the drifted engine's device de-rated (:func:`drift_scaled_device`).
     """
     if objective not in OBJECTIVES:
         raise ValueError(f"unknown placement objective: {objective!r} "
@@ -257,8 +281,10 @@ def place_phases(
     if price not in ("analytic", "measured"):
         raise ValueError(f"unknown pricing source: {price!r}")
     engines = tuple(engines if engines is not None else PLACEMENT_ENGINES)
-    overrides = (_measured_devices(engines, cache_path)
-                 if price == "measured" else {})
+    overrides = dict(_measured_devices(engines, cache_path)
+                     if price == "measured" else {})
+    if device_overrides:
+        overrides.update(device_overrides)
 
     needed_kinds = {spec.kind
                     for spec in phase_network_spec(cfg, seq=1, kv_len=2)}

@@ -17,7 +17,17 @@ The contracts this file pins:
   * fed burst telemetry round-trips: cache entries validate against the
     profiling-cache schema and ``MeasuredPricer`` retrieves them under the
     exact (fingerprint, engine, environment) key admission pricing uses,
-    with per-layer medians summing back to the observed step time.
+    with per-layer medians summing back to the observed step time;
+  * the watchdog control loop is safe and effective: latency(batch) fits
+    are monotone (isotonic) with a scaled-analytic fallback below two
+    telemetry points, alerts are warm-up-gated / edge-triggered / re-armed
+    by re-pricing, cold-start (jit-compile) bursts are discarded per batch
+    bucket, a well-priced watchdog run is bit-identical to the plain
+    traced run, and an injected mispricing is detected and corrected
+    mid-run without changing outputs;
+  * degenerate zero-cost telemetry is rejected at both ends: underflowed
+    layer shares never reach the cache and a zero-median cache entry is a
+    pricer miss, never a "free" layer.
 """
 import json
 import math
@@ -407,6 +417,299 @@ def test_observability_defaults():
     obs = Observability()
     assert isinstance(obs.tracer, NullTracer)
     assert isinstance(obs.registry, MetricsRegistry)
-    assert obs.feedback is None
+    assert obs.feedback is None and obs.watchdog is None
     traced = Observability(tracer=Tracer())
     assert traced.tracer.enabled and traced.registry is not obs.registry
+
+
+# ------------------------------------------------------- latency curves
+def test_piecewise_interp_contract():
+    from repro.core.cost_model import piecewise_interp
+    xs, ys = [2.0, 4.0, 8.0], [1.0, 2.0, 3.0]
+    assert piecewise_interp(xs, ys, 4.0) == pytest.approx(2.0)   # knot
+    assert piecewise_interp(xs, ys, 3.0) == pytest.approx(1.5)   # interior
+    # extrapolation continues the clamped edge slope
+    assert piecewise_interp(xs, ys, 10.0) == pytest.approx(3.5)
+    assert piecewise_interp(xs, ys, 1.0) == pytest.approx(0.5)
+    # and never goes negative even when the edge slope would
+    assert piecewise_interp([1.0, 2.0], [1.0, 0.1], 100.0) == 0.0
+    with pytest.raises(ValueError):
+        piecewise_interp([1.0], [1.0], 1.0)        # < 2 knots
+    with pytest.raises(ValueError):
+        piecewise_interp([2.0, 2.0], [1.0, 1.0], 1.0)   # not increasing
+
+
+def test_isotonic_fit_restores_monotonicity():
+    from repro.obs.curves import isotonic_fit
+    ys = [1.0, 3.0, 2.0, 5.0]
+    fit = isotonic_fit(ys)
+    assert all(b >= a for a, b in zip(fit, fit[1:]))
+    # PAV merges the violating pair to its mean, leaves the rest alone
+    assert fit == pytest.approx([1.0, 2.5, 2.5, 5.0])
+    assert isotonic_fit([1.0, 2.0, 3.0]) == pytest.approx([1.0, 2.0, 3.0])
+
+
+def test_fitted_curve_from_non_monotone_telemetry():
+    from repro.obs.curves import fit_latency_curve, median_points
+    # batch 2 measured *below* batch 1 (noise): the fit must come out
+    # monotone — a latency(batch) curve that dips would let admission
+    # claim a bigger batch is cheaper than a smaller one
+    curve = fit_latency_curve(
+        median_points({1: [0.010], 2: [0.008, 0.009], 4: [0.016]}))
+    assert curve is not None and curve.batches == (1, 2, 4)
+    assert all(b >= a for a, b in zip(curve.step_s, curve.step_s[1:]))
+    assert curve.raw_step_s == (0.010, 0.0085, 0.016)   # medians survive
+    assert curve.predict(3) == pytest.approx(
+        (curve.step_s[1] + curve.step_s[2]) / 2)
+    # residuals quantify what isotonicity changed, per knot
+    res = curve.residuals()
+    assert res[1] > 0 and res[4] == pytest.approx(0.0)
+    assert curve.max_batch_within(curve.step_s[1], 8) >= 2
+    json.dumps(curve.summary(), allow_nan=False)
+
+
+def test_single_telemetry_point_falls_back_to_scaled_analytic():
+    from repro.obs import PerfWatchdog
+    from repro.obs.curves import fit_latency_curve, median_points
+    assert fit_latency_curve(
+        median_points({4: [0.01, 0.012]})) is None   # one batch size
+    assert fit_latency_curve({}) is None
+    wd = PerfWatchdog(skip_first=0)
+    analytic = lambda n: 1e-3 * n                          # noqa: E731
+    # nothing observed: the analytic model passes through untouched
+    fn, source = wd.step_time_fn("eng", "decode", analytic)
+    assert source == "analytic" and fn is analytic
+    # one batch size observed: analytic *shape* scaled by the EWMA ratio
+    wd.observe_burst("eng", "decode", n_tokens=2, steps=10, elapsed_s=0.04,
+                     priced_step_s=2e-3)
+    fn, source = wd.step_time_fn("eng", "decode", analytic)
+    assert source == "scaled-analytic"
+    assert fn(2) == pytest.approx(2e-3 * 2.0)   # ratio = 4ms/2ms = 2
+    assert wd.curve("eng", "decode") is None
+    # two batch sizes observed: the fitted curve takes over
+    wd.observe_burst("eng", "decode", n_tokens=4, steps=10, elapsed_s=0.08,
+                     priced_step_s=4e-3)
+    fn, source = wd.step_time_fn("eng", "decode", analytic)
+    assert source == "fitted-curve"
+    assert fn(2) == pytest.approx(4e-3) and fn(4) == pytest.approx(8e-3)
+
+
+# ------------------------------------------------------- watchdog detector
+def test_watchdog_warmup_gates_alerts_and_reprice_rearms():
+    from repro.obs import PerfWatchdog
+    wd = PerfWatchdog(warmup=4, skip_first=0, drift_gate=1.5,
+                      ewma_alpha=1.0)
+    feed = lambda: wd.observe_burst(                       # noqa: E731
+        "eng", "decode", n_tokens=2, steps=1, elapsed_s=0.01,
+        priced_step_s=1e-3)                                # ratio 10x
+    for _ in range(3):
+        assert feed() is None            # divergent but still warming up
+    assert wd.alerts == [] and wd.pending_actions() == []
+    alert = feed()                       # 4th observation crosses the gate
+    assert alert is not None and alert.direction == "slow"
+    assert alert.ewma_ratio == pytest.approx(10.0) and alert.n_obs == 4
+    # edge-triggered: the alert stays active, no duplicates pile up
+    assert feed() is None and len(wd.alerts) == 1
+    assert wd.pending_actions() == [alert] and wd.pending_actions() == []
+    # acting re-arms: the stream must re-warm against the new price
+    wd.note_reprice(alert, {"pricing": "scaled-analytic"})
+    assert wd.reprices[0]["pricing"] == "scaled-analytic"
+    for _ in range(3):
+        assert feed() is None
+    assert feed() is not None and len(wd.alerts) == 2
+
+
+def test_watchdog_skips_cold_start_burst_per_bucket():
+    from repro.obs import PerfWatchdog
+    wd = PerfWatchdog(warmup=1, skip_first=1, ewma_alpha=1.0)
+    # first burst at bucket 2 carries jit compile time: ignored entirely
+    wd.observe_burst("eng", "decode", n_tokens=2, steps=1, elapsed_s=30.0,
+                     priced_step_s=1e-3)
+    assert wd.ewma("eng", "decode") is None
+    assert wd.curve("eng", "decode") is None
+    wd.observe_burst("eng", "decode", n_tokens=2, steps=1, elapsed_s=2e-3,
+                     priced_step_s=1e-3)
+    assert wd.ewma("eng", "decode") == pytest.approx(2.0)
+    # a new bucket (4) recompiles: its first burst is skipped too, while
+    # the warm bucket keeps observing
+    wd.observe_burst("eng", "decode", n_tokens=4, steps=1, elapsed_s=30.0,
+                     priced_step_s=1e-3)
+    assert wd.ewma("eng", "decode") == pytest.approx(2.0)
+    wd.observe_burst("eng", "decode", n_tokens=4, steps=1, elapsed_s=4e-3,
+                     priced_step_s=1e-3)
+    st = wd.report()["streams"]["eng/decode"]
+    assert st["batches_observed"] == [2, 4]
+
+
+def test_watchdog_instrumentation_lands_in_registry_and_trace():
+    from repro.obs import PerfWatchdog
+    reg, tr = MetricsRegistry(), Tracer(_virtual_clock())
+    wd = PerfWatchdog(warmup=2, skip_first=0, ewma_alpha=1.0)
+    obs = Observability(tracer=tr, registry=reg, watchdog=wd)
+    assert obs.watchdog is wd            # bundle binds and exposes it
+    for _ in range(2):
+        wd.observe_burst("eng", "decode", n_tokens=2, steps=1,
+                         elapsed_s=0.01, priced_step_s=1e-3)
+    (alert,) = wd.pending_actions()
+    wd.note_reprice(alert, {"pricing": "fitted-curve", "token_budget": 4})
+    assert reg.counters["watchdog_observations"].value == 2
+    assert reg.counters["watchdog_alerts"].value == 1
+    assert reg.counters["watchdog_reprices"].value == 1
+    assert reg.gauges["drift_eng_decode"].value == pytest.approx(10.0)
+    names = [e.name for e in tr.events if e.ph == "i"]
+    assert "drift_alert" in names and "reprice" in names
+    counters = [e for e in tr.events if e.ph == "C" and e.name == "drift"]
+    assert counters and counters[-1].args["eng/decode"] == 10.0
+    json.dumps(wd.report(), allow_nan=False)
+
+
+def test_watchdog_sync_cadence_stretches_under_pressure():
+    from repro.obs import PerfWatchdog
+    wd = PerfWatchdog(skip_first=0, ewma_alpha=1.0, sync_budget_frac=0.25,
+                      max_sync_every=4)
+    assert wd.sync_cadence() == 1        # nothing observed yet
+    wd.observe_burst("eng", "decode", n_tokens=2, steps=4, elapsed_s=0.1,
+                     priced_step_s=1e-3)
+    wd.observe_sync(0.01)                # 10% of burst cost: within budget
+    assert wd.sync_cadence() == 1
+    wd.observe_sync(0.2)                 # syncs dominate: stretch, capped
+    assert wd.sync_cadence() == 4
+
+
+# ------------------------------------------------------- the closed loop
+def test_watchdog_run_bit_identical_to_traced_run(tiny_params):
+    # the watchdog only observes (and in this well-priced run never acts):
+    # outputs, steps and admissions match the plain traced run exactly
+    from repro.obs import PerfWatchdog
+    obs, reqs, m, loop = _traced_run(tiny_params)
+    wd = PerfWatchdog()
+    wobs = Observability(tracer=Tracer(), watchdog=wd)
+    wreqs = _workload()
+    weng = EngineLoop(TINY, tiny_params, n_slots=3, max_seq=MAX_LEN,
+                      obs=wobs)
+    wm = weng.run(wreqs, now_fn=_virtual_clock())
+    assert {r.rid: r.output for r in wreqs} == \
+        {r.rid: r.output for r in reqs}
+    assert wm.n_steps == m.n_steps
+    assert weng.batcher.n_admitted == loop.batcher.n_admitted
+
+
+def test_watchdog_reprices_mispriced_engine(tiny_params):
+    # inject a device model priced ~100x the step SLO at batch 2: static
+    # admission pins the token budget to 1, the watchdog must notice the
+    # hardware is far cheaper than the price and re-open the batch
+    from repro.core import device_models
+    from repro.obs import PerfWatchdog
+    from repro.serving.batcher import step_time_model
+    from repro.serving.placement import drift_scaled_device
+    base = device_models.get("tpu-v5e")
+    slo = 0.05
+    factor = 100.0 * slo / step_time_model(TINY, MAX_LEN, 2, device=base)
+    drifted = drift_scaled_device(base, factor)
+
+    plain_reqs = _workload(n=12)
+    plain = EngineLoop(TINY, tiny_params, n_slots=3, max_seq=MAX_LEN)
+    plain.run(plain_reqs)
+
+    wd = PerfWatchdog()
+    obs = Observability(tracer=Tracer(), watchdog=wd)
+    eng = EngineLoop(TINY, tiny_params, n_slots=3, max_seq=MAX_LEN,
+                     device_model=drifted, step_slo_s=slo, obs=obs)
+    assert eng.batcher.token_budget == 1          # the mispriced state
+    eng.warmup()      # compile every bucket: the watchdog must see real
+    reqs = _workload(n=12)                        # step costs, not jit
+    m = eng.run(reqs)
+    assert m.n_done == 12
+    assert len(wd.alerts) >= 1 and len(wd.reprices) >= 1
+    assert wd.alerts[0].direction == "fast"       # priced >> observed
+    assert eng.batcher.token_budget == 3          # re-opened to all slots
+    assert eng.batcher.price_source in ("scaled-analytic", "fitted-curve")
+    assert eng.batcher.n_reprices >= 1
+    # re-pricing is pure admission policy: outputs stay bit-identical
+    assert {r.rid: r.output for r in reqs} == \
+        {r.rid: r.output for r in plain_reqs}
+    names = [e.name for e in obs.tracer.events if e.ph == "i"]
+    assert "drift_alert" in names and "reprice" in names
+    assert obs.registry.counters["watchdog_reprices"].value == \
+        len(wd.reprices)
+    rep = wd.report()
+    assert any(r["token_budget"] == 3 for r in rep["reprices"])
+    json.dumps(rep, allow_nan=False)
+
+
+def test_drift_scaled_device_and_placement_overrides():
+    from repro.core import device_models
+    from repro.serving.placement import drift_scaled_device
+    base = device_models.get("tpu-v5e")
+    d2 = drift_scaled_device(base, 2.0)
+    assert d2.peak_flops == pytest.approx(base.peak_flops / 2)
+    assert d2.mem_bw == pytest.approx(base.mem_bw / 2)
+    assert "drift" in d2.name and base.name in d2.name
+    for k, v in d2.throughput.items():
+        assert v == pytest.approx(base.throughput[k] / 2)
+    with pytest.raises(ValueError):
+        drift_scaled_device(base, 0.0)
+
+
+# --------------------------------------- snapshot health (ring + series)
+def test_metrics_snapshot_surfaces_drops_and_sample_lengths(tmp_path,
+                                                           tiny_params):
+    obs, reqs, m, _ = _traced_run(tiny_params)
+    snap = obs.registry.snapshot()
+    assert snap["series_len"] == len(obs.registry.series)
+    for h in snap["histograms"].values():
+        assert h["n_samples"] >= 0       # bounded reservoir actually held
+    assert snap["histograms"]["ttft_s"]["n_samples"] > 0
+    # a deliberately tiny ring drops events, and the exported snapshot
+    # says so instead of silently presenting a truncated trace as complete
+    tr = Tracer(_virtual_clock(), capacity=4)
+    for i in range(10):
+        tr.instant(f"e{i}", track="server")
+    path = write_metrics(obs.registry, str(tmp_path / "m.json"), tracer=tr,
+                         extra={"summary": m.summary()})
+    with open(path) as f:
+        data = json.load(f, parse_constant=lambda c: pytest.fail(c))
+    assert data["trace"] == {"n_events": 4, "n_dropped": 6, "n_open": 0,
+                             "enabled": True}
+    assert data["series_len"] == snap["series_len"]
+
+
+# ------------------------------------ degenerate telemetry is not "free"
+def test_zero_cost_cache_entries_are_misses_not_free_layers():
+    # feed a real burst, then zero out one entry's median the way a
+    # degenerate (clock-resolution) measurement would: the pricer must
+    # treat it as a miss — a 0-cost hit makes MeasuredPricer price the
+    # layer as free and poisons achieved-FLOPs calibration downstream
+    fb = TelemetryFeedback(TINY, kv_len=MAX_LEN)
+    fb.observe_burst(3, 4, 0.04)
+    cache = ProfileCache()
+    assert fb.flush(cache) > 0
+    pricer = MeasuredPricer(cache, measure_on_miss=False, autosave=False)
+    net = decode_network_spec(TINY, MAX_LEN)
+    spec = next(s for s in net if s.flops(3) > 0)
+    assert pricer.measurement_for(spec, XLA_ENGINE, batch=3,
+                                  dtype=jnp.float32) is not None
+    for entry in cache.entries.values():
+        entry["t_median"] = 0.0
+    assert pricer.measurement_for(spec, XLA_ENGINE, batch=3,
+                                  dtype=jnp.float32) is None
+
+
+def test_feedback_skips_underflowed_layer_shares():
+    # a burst so short that a layer's FLOP-share apportionment underflows
+    # to 0.0 must not be fed to the cache at all (same degenerate-entry
+    # class the pricer guards against, cut off at the source)
+    fb = TelemetryFeedback(TINY, kv_len=MAX_LEN)
+    fb.observe_burst(3, 1, 5e-324)       # one denormal-seconds "step"
+    assert fb.measurements() == []
+    cache = ProfileCache()
+    assert fb.flush(cache) == 0 and not cache.entries
+
+
+def test_cache_measurements_source_filter():
+    fb = TelemetryFeedback(TINY, kv_len=MAX_LEN)
+    fb.observe_burst(3, 4, 0.04)
+    cache = ProfileCache()
+    n = fb.flush(cache)
+    assert len(cache.measurements(source="serving-telemetry")) == n
+    assert cache.measurements(source="microbench") == []

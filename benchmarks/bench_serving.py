@@ -12,7 +12,11 @@ check also gates paged-vs-dense numerics).  The ``paged`` section
 quantifies the layout itself: KV bytes resident paged vs dense at equal
 slots, the slot count a paged pool fits in the dense byte budget, the
 saturation-throughput cost of the page gather, and paged/dense
-bit-identity in colocated and disaggregated modes.  The ``streaming``
+bit-identity in colocated and disaggregated modes.  The ``prefix``
+section prices prefix sharing at a dense-equal block budget: under 50%
+and 90% prefix-shared traffic, refcounted shared pages with copy-on-write
+tails must raise peak concurrent slots (and cut TTFT) versus the same
+pool without sharing, bit-identically.  The ``streaming``
 section compares incremental (burst-boundary) token delivery against the
 completion pull in both colocated and disaggregated modes — streamed
 deltas must concatenate to exactly the completion rows, and the honest
@@ -48,7 +52,8 @@ from repro.launch.serve import Server
 from repro.models import transformer as T
 from repro.obs import Observability, Tracer
 from repro.serving import (DisaggregatedEngineLoop, EngineLoop, ServeMetrics,
-                           place_phases, synthetic_workload)
+                           place_phases, prefix_shared_workload,
+                           synthetic_workload)
 
 SMOKE_CFG = T.ModelConfig(
     name="bench-serving-smoke", n_layers=4, d_model=96, n_heads=6,
@@ -226,6 +231,98 @@ def run_paged(cfg, params, baselines: Dict, *, n_requests: int, slots: int,
           f"{d['tok_per_s']:.1f} tok/s "
           f"({section['tok_per_s_ratio']:.2f}x); "
           f"bit_identical={section['all_identical']}", flush=True)
+    return section
+
+
+def run_prefix(cfg, params, *, n_requests: int, seed: int,
+               block_size: int = 16) -> Dict:
+    """Prefix sharing vs unshared paging at a dense-equal KV budget.
+
+    Workload: the chat/agent system-prompt pattern — a ``shared_frac`` of
+    requests front-load one common 48-token prefix (3 full blocks) ahead of
+    a unique suffix (``prefix_shared_workload``).  Both runs get the *same*
+    constrained pool: 16 engine slots but only enough blocks to hold 8
+    dense residents (``total_blocks = 8 x blocks_per_slot``), so block
+    supply — not slot count — caps concurrency.  Without sharing every
+    request draws its full footprint from the free list and at most 8 ever
+    run at once; with sharing, once an early resident has written and
+    published the common prefix blocks, later arrivals map onto them
+    (refcounted, copy-on-write at the divergent tail) and draw only their
+    unique blocks, so more land in flight and the queue drains sooner.
+
+    Reported per shared-traffic fraction: peak concurrent slots and the
+    ratio (the admitted-capacity win), TTFT p50 and queue-wait ratios, the
+    prefix-cache hit/skip/COW counters, and bit-identity — shared KV pages
+    hold exactly the values the request would have written itself, so
+    greedy outputs must match the unshared run token for token.  The 90%
+    fraction's capacity win and its bit-identity are the gated claims."""
+    shared_prefix_len = 3 * block_size           # 48: full-block chain
+    suffix_lens = (block_size // 2, block_size)  # unique tail, 1 block
+    gen_lens = (4, 8, 16)
+    max_len = shared_prefix_len + max(suffix_lens) + max(gen_lens)
+    bps = -(-max_len // block_size)
+    n_slots = 16
+    dense_slots = 8                              # the byte budget: 8 dense
+    total_blocks = dense_slots * bps             # residents, 16 slot leases
+
+    def _workload_p(frac):
+        return prefix_shared_workload(
+            n_requests, rate=1e9, vocab=cfg.vocab,
+            shared_prefix_len=shared_prefix_len, shared_frac=frac,
+            suffix_lens=suffix_lens, gen_lens=gen_lens, seed=seed)
+
+    def _run(frac, sharing):
+        reqs = _workload_p(frac)
+        eng = EngineLoop(cfg, params, n_slots=n_slots, max_seq=max_len,
+                         block_size=block_size, kv_layout="paged",
+                         total_blocks=total_blocks, prefix_sharing=sharing)
+        eng.warmup()
+        m = eng.run(reqs)
+        return eng, m, {r.rid: r.output for r in reqs}
+
+    section: Dict[str, object] = {
+        "block_size": block_size,
+        "blocks_per_slot": bps,
+        "n_slots": n_slots,
+        "total_blocks": total_blocks,
+        "dense_equivalent_slots": dense_slots,
+        "shared_prefix_len": shared_prefix_len,
+        "n_requests": n_requests,
+    }
+    identical = []
+    for frac in (0.5, 0.9):
+        off_eng, m_off, out_off = _run(frac, False)
+        on_eng, m_on, out_on = _run(frac, True)
+        off, on = m_off.summary(), m_on.summary()
+        st_off, st_on = off_eng.pool.stats(), on_eng.pool.stats()
+        bit_identical = out_off == out_on
+        identical.append(bit_identical)
+        entry = {
+            "unshared": off,
+            "shared": on,
+            "peak_slots_unshared": st_off["peak_slots_in_use"],
+            "peak_slots_shared": st_on["peak_slots_in_use"],
+            "admitted_slots_ratio": (st_on["peak_slots_in_use"]
+                                     / max(st_off["peak_slots_in_use"], 1)),
+            "ttft_p50_ratio": off["ttft_p50_s"] / on["ttft_p50_s"],
+            "tok_per_s_ratio": on["tok_per_s"] / off["tok_per_s"],
+            "prefix_hits": st_on["prefix_hits"],
+            "tokens_prefill_skipped": st_on["tokens_prefill_skipped"],
+            "cow_copies": st_on["cow_copies"],
+            "bit_identical": bit_identical,
+        }
+        section[f"shared_frac_{int(frac * 100)}"] = entry
+        print(f"[bench_serving] prefix[{frac:.0%} shared]: peak "
+              f"{st_on['peak_slots_in_use']} slots shared vs "
+              f"{st_off['peak_slots_in_use']} unshared "
+              f"({entry['admitted_slots_ratio']:.2f}x) at the "
+              f"{dense_slots}-dense-slot block budget; ttft p50 "
+              f"{entry['ttft_p50_ratio']:.2f}x better, "
+              f"{entry['prefix_hits']} hits / "
+              f"{entry['tokens_prefill_skipped']} prefill tokens skipped / "
+              f"{entry['cow_copies']} cow copies, "
+              f"bit_identical={bit_identical}", flush=True)
+    section["all_identical"] = all(identical)
     return section
 
 
@@ -609,6 +706,8 @@ def run_bench(*, n_requests: int, slots: int, rates: List[float],
     results["paged"] = run_paged(
         cfg, params, baselines, n_requests=n_requests, slots=slots,
         max_len=max_len, seed=seed)
+    results["prefix"] = run_prefix(
+        cfg, params, n_requests=max(n_requests * 2 // 3, 8), seed=seed)
     results["streaming"] = run_streaming(
         cfg, params, baselines, n_requests=n_requests, slots=slots,
         max_len=max_len, seed=seed)
@@ -624,6 +723,7 @@ def run_bench(*, n_requests: int, slots: int, rates: List[float],
         [l["bit_identical"] for l in results["loads"]]
         + [results["disaggregation"]["bit_identical"],
            results["paged"]["all_identical"],
+           results["prefix"]["all_identical"],
            results["streaming"]["all_identical"],
            results["observability"]["all_identical"],
            results["adaptive"]["all_identical"]])

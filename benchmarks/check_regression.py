@@ -26,7 +26,11 @@ bit-identical to static, the disaggregated run's outputs must be
 bit-identical to colocated, the ``paged`` section must be present and
 well-formed — paged outputs bit-identical to dense in colocated and
 disaggregated modes and ``kv_bytes_paged`` strictly below
-``kv_bytes_dense`` at equal slots — and the ``streaming`` section must be
+``kv_bytes_dense`` at equal slots — the ``prefix`` section must be
+present and well-formed (shared outputs bit-identical to unshared at both
+traffic mixes, prefix hits actually fired, and a >=1.5x peak-slots or p50
+TTFT win at 90% shared traffic under the dense-equal block budget) — and
+the ``streaming`` section must be
 present and well-formed (streamed outputs bit-identical to the completion
 pull, deltas concatenating to exactly the completion rows,
 ``ttft_dispatch <= ttft``) — so a malformed BENCH_serving.json fails the
@@ -206,6 +210,87 @@ def validate_streaming(fresh: dict) -> List[Tuple[str, bool, str]]:
         checks.append((
             f"streamed outputs identical to completion pull ({mode})", ok,
             ", ".join(f"{k}={entry.get(k)}" for k in _STREAMING_BOOL_KEYS)))
+    return checks
+
+
+# the capacity win prefix sharing must show at 90% shared traffic and a
+# dense-equal block budget: >=1.5x peak concurrent slots, or equivalently
+# >=1.5x lower p50 TTFT (the same win read off the latency axis)
+PREFIX_CAPACITY_FLOOR = 1.5
+
+_PREFIX_NUMERIC_KEYS = ("block_size", "blocks_per_slot", "n_slots",
+                        "total_blocks", "dense_equivalent_slots",
+                        "shared_prefix_len", "n_requests")
+_PREFIX_ENTRY_NUMERIC_KEYS = ("peak_slots_unshared", "peak_slots_shared",
+                              "admitted_slots_ratio", "ttft_p50_ratio",
+                              "tok_per_s_ratio", "prefix_hits",
+                              "tokens_prefill_skipped", "cow_copies")
+
+
+def validate_prefix(fresh: dict) -> List[Tuple[str, bool, str]]:
+    """Schema + correctness checks for the ``prefix`` section: well-formed
+    per-fraction entries, shared outputs bit-identical to unshared at both
+    traffic mixes, prefix hits actually fired, and the 90%-shared capacity
+    win at or above :data:`PREFIX_CAPACITY_FLOOR` on peak admitted slots
+    or p50 TTFT at the dense-equal block budget."""
+    checks: List[Tuple[str, bool, str]] = []
+    section = fresh.get("prefix")
+    if not isinstance(section, dict):
+        return [("prefix section present", False,
+                 f"missing or not an object: {type(section).__name__}")]
+    problems: List[str] = []
+    for k in _PREFIX_NUMERIC_KEYS:
+        if not _num(section.get(k)):
+            problems.append(f"{k}: not a finite number")
+    if not isinstance(section.get("all_identical"), bool):
+        problems.append("all_identical: not a bool")
+    for frac in ("shared_frac_50", "shared_frac_90"):
+        entry = section.get(frac)
+        if not isinstance(entry, dict):
+            problems.append(f"{frac}: missing")
+            continue
+        for k in _PREFIX_ENTRY_NUMERIC_KEYS:
+            if not _num(entry.get(k)):
+                problems.append(f"{frac}.{k}: not a finite number")
+        if not isinstance(entry.get("bit_identical"), bool):
+            problems.append(f"{frac}.bit_identical: not a bool")
+        for kind in ("unshared", "shared"):
+            summ = entry.get(kind)
+            if not isinstance(summ, dict):
+                problems.append(f"{frac}.{kind}: missing summary")
+                continue
+            for k in ("tok_per_s", "ttft_p50_s", "tokens_out",
+                      "requests_done"):
+                if not _num(summ.get(k)):
+                    problems.append(f"{frac}.{kind}.{k}: not a finite "
+                                    f"number")
+    checks.append(("prefix section schema", not problems,
+                   "; ".join(problems) if problems else
+                   "50% + 90% shared-traffic entries well-formed"))
+    if problems:
+        return checks
+    checks.append((
+        "shared outputs bit-identical to unshared",
+        section["all_identical"]
+        and all(section[f]["bit_identical"]
+                for f in ("shared_frac_50", "shared_frac_90")),
+        ", ".join(f"{f}={section[f]['bit_identical']}"
+                  for f in ("shared_frac_50", "shared_frac_90"))))
+    e90 = section["shared_frac_90"]
+    checks.append((
+        "prefix cache actually shared pages",
+        e90["prefix_hits"] >= 1 and e90["tokens_prefill_skipped"] >= 1,
+        f"{e90['prefix_hits']} hits, {e90['tokens_prefill_skipped']} "
+        f"prefill tokens skipped, {e90['cow_copies']} cow copies at 90%"))
+    win = max(e90["admitted_slots_ratio"], e90["ttft_p50_ratio"])
+    checks.append((
+        "prefix sharing capacity win at dense-equal budget",
+        win >= PREFIX_CAPACITY_FLOOR,
+        f"90% shared: {e90['peak_slots_shared']} vs "
+        f"{e90['peak_slots_unshared']} peak slots "
+        f"({e90['admitted_slots_ratio']:.2f}x), ttft p50 "
+        f"{e90['ttft_p50_ratio']:.2f}x better "
+        f"(floor {PREFIX_CAPACITY_FLOOR}x on either axis)"))
     return checks
 
 
@@ -497,14 +582,18 @@ def compare(baseline: dict, fresh: dict, *, threshold: float,
                        f"{dis['handoff']['n_handoffs']} handoffs, "
                        f"{dis['handoff']['bytes_moved']} bytes"))
     checks.extend(validate_paged(fresh))
+    checks.extend(validate_prefix(fresh))
     checks.extend(validate_streaming(fresh))
     checks.extend(validate_observability(fresh))
     checks.extend(validate_adaptive(fresh))
     return checks
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+def build_parser() -> argparse.ArgumentParser:
+    """The regression gate's argument parser (module-level so tests and
+    the docs consistency gate can introspect the flag set)."""
+    ap = argparse.ArgumentParser(prog="benchmarks.check_regression",
+                                 description=__doc__.splitlines()[0])
     ap.add_argument("--baseline", default="BENCH_serving.json",
                     help="committed benchmark results (the reference)")
     ap.add_argument("--fresh", default=None,
@@ -532,6 +621,11 @@ def main() -> None:
                          "drift_alert + reprice instants (a serve "
                          "--watchdog --misprice run must have detected "
                          "and corrected the injected drift)")
+    return ap
+
+
+def main() -> None:
+    ap = build_parser()
     args = ap.parse_args()
     if args.fresh is None and args.trace is None:
         ap.error("at least one of --fresh / --trace is required")

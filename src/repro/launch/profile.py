@@ -43,8 +43,11 @@ NETS = {
 }
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+def build_parser() -> argparse.ArgumentParser:
+    """The profile CLI's argument parser (module-level so tests and the
+    docs consistency gate can introspect the flag set)."""
+    ap = argparse.ArgumentParser(prog="repro.launch.profile",
+                                 description=__doc__.splitlines()[0])
     ap.add_argument("--net", default="alexnet-full", choices=sorted(NETS))
     ap.add_argument("--engines", default=None,
                     help="comma-separated engine names (default: all "
@@ -62,7 +65,11 @@ def main() -> None:
     ap.add_argument("--invalidate-stale", action="store_true",
                     help="drop cache entries from other jax versions / "
                          "backends before profiling")
-    args = ap.parse_args()
+    return ap
+
+
+def main() -> None:
+    args = build_parser().parse_args()
 
     net = NETS[args.net]()
     if args.engines:

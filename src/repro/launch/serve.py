@@ -55,7 +55,7 @@ from ..models import transformer as T
 from ..obs import Observability, TelemetryFeedback, Tracer, default_clock
 from ..obs.export import write_metrics, write_trace
 from ..serving import (DisaggregatedEngineLoop, EngineLoop, place_phases,
-                       synthetic_workload)
+                       prefix_shared_workload, synthetic_workload)
 from ..serving import placement as placement_lib
 from .mesh import make_host_mesh, make_production_mesh
 
@@ -98,8 +98,12 @@ def build_params(cfg: T.ModelConfig, mesh):
                        out_shardings=p_sh)(jax.random.PRNGKey(0))
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    """The serve CLI's argument parser (module-level so tests and the docs
+    consistency gate can introspect the flag set without running a
+    server)."""
+    ap = argparse.ArgumentParser(prog="repro.launch.serve",
+                                 description=__doc__.splitlines()[0])
     ap.add_argument("--arch", default="qwen2_1_5b")
     ap.add_argument("--scale", default="smoke", choices=["smoke", "full"])
     ap.add_argument("--batch", type=int, default=4,
@@ -126,6 +130,22 @@ def main() -> None:
                          "(default: the dense equivalent; smaller values "
                          "provision for tokens-in-flight and admission "
                          "defers when pages run out)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="continuous path, paged layout: maintain a prefix "
+                         "index over prompt-token block prefixes and map "
+                         "matching prefixes onto already-written KV pages "
+                         "(refcounted, copy-on-write at a divergent tail) — "
+                         "shared prefixes skip prefill and draw no fresh "
+                         "blocks, so more requests fit the same pool")
+    ap.add_argument("--shared-prefix-len", type=int, default=None,
+                    metavar="N",
+                    help="workload: front-load one common N-token prefix "
+                         "onto --shared-frac of the requests (the chat/"
+                         "agent system-prompt pattern prefix sharing "
+                         "exploits); default: fully unique prompts")
+    ap.add_argument("--shared-frac", type=float, default=0.9,
+                    help="workload: fraction of requests carrying the "
+                         "--shared-prefix-len common prefix (default 0.9)")
     ap.add_argument("--rate", type=float, default=16.0,
                     help="continuous path: offered load (req/s)")
     ap.add_argument("--stream", action="store_true",
@@ -205,6 +225,11 @@ def main() -> None:
                     help="--slo-report: time-to-first-token objective (ms)")
     ap.add_argument("--slo-tpot-ms", type=float, default=200.0,
                     help="--slo-report: time-per-output-token objective (ms)")
+    return ap
+
+
+def main() -> None:
+    ap = build_parser()
     args = ap.parse_args()
     if args.placement == "auto" and (args.prefill_engine
                                      or args.decode_engine):
@@ -220,6 +245,13 @@ def main() -> None:
                  "instrument the continuous engine; drop --static-batching")
     if args.misprice is not None and args.misprice <= 0:
         ap.error("--misprice must be > 0")
+    if args.prefix_sharing and args.kv_layout == "dense":
+        ap.error("--prefix-sharing maps physical KV pages; it requires "
+                 "--kv-layout paged")
+    if args.prefix_sharing and args.static_batching:
+        ap.error("--prefix-sharing needs the continuous engine's KV pool")
+    if args.shared_prefix_len is not None and args.shared_prefix_len <= 0:
+        ap.error("--shared-prefix-len must be > 0")
 
     arch = registry.get(args.arch)
     cfg = arch.smoke if args.scale == "smoke" else arch.config
@@ -233,6 +265,16 @@ def main() -> None:
               f"support rolling buffers yet — falling back to dense",
               flush=True)
         args.kv_layout = "dense"
+    if args.prefix_sharing:
+        if args.kv_layout != "paged":
+            raise SystemExit(f"[serve] --prefix-sharing requires the paged "
+                             f"KV layout, but {args.arch} fell back to "
+                             f"dense (sliding-window attention)")
+        if any(t != "attn" for t in cfg.layer_types()):
+            raise SystemExit(f"[serve] --prefix-sharing requires an all-"
+                             f"attention config; {args.arch} mixes layer "
+                             f"types {sorted(set(cfg.layer_types()))} "
+                             f"(recurrent/cross state is slot-local)")
 
     mesh = (make_host_mesh() if args.mesh == "host" else
             make_production_mesh(multi_pod=args.mesh == "multipod"))
@@ -263,13 +305,25 @@ def main() -> None:
               f"{dt:.1f}s ({total_toks / dt:.1f} tok/s)")
         return
 
-    # continuous batching: mixed-length open-loop traffic
-    requests = synthetic_workload(
-        args.requests, rate=args.rate, vocab=cfg.vocab,
-        prompt_lens=(max(args.prompt_len // 2, 1), args.prompt_len),
-        gen_lens=(max(args.gen_len // 8, 1), max(args.gen_len // 2, 1),
-                  args.gen_len),
-        seed=1)
+    # continuous batching: mixed-length open-loop traffic.  With
+    # --shared-prefix-len the stream front-loads one common prefix onto
+    # --shared-frac of the requests (prompts grow by the prefix, so the
+    # pool's max_seq grows with them)
+    gen_lens = (max(args.gen_len // 8, 1), max(args.gen_len // 2, 1),
+                args.gen_len)
+    if args.shared_prefix_len is not None:
+        requests = prefix_shared_workload(
+            args.requests, rate=args.rate, vocab=cfg.vocab,
+            shared_prefix_len=args.shared_prefix_len,
+            shared_frac=args.shared_frac,
+            suffix_lens=(max(args.prompt_len // 2, 1), args.prompt_len),
+            gen_lens=gen_lens, seed=1)
+        max_len += args.shared_prefix_len
+    else:
+        requests = synthetic_workload(
+            args.requests, rate=args.rate, vocab=cfg.vocab,
+            prompt_lens=(max(args.prompt_len // 2, 1), args.prompt_len),
+            gen_lens=gen_lens, seed=1)
     device_model = None
     if args.calibrated_cache is not None:
         import os
@@ -380,6 +434,7 @@ def main() -> None:
             n_decode_slots=args.slots, max_seq=max_len,
             kv_layout=args.kv_layout,
             decode_total_blocks=args.total_blocks,
+            prefix_sharing=args.prefix_sharing,
             prefill_device=_misprice(_phase_device(pre_eng)),
             decode_device=_misprice(_phase_device(dec_eng)),
             step_slo_s=step_slo_s, obs=obs,
@@ -401,6 +456,7 @@ def main() -> None:
         engine = EngineLoop(
             cfg, params, n_slots=args.slots, max_seq=max_len,
             kv_layout=args.kv_layout, total_blocks=args.total_blocks,
+            prefix_sharing=args.prefix_sharing,
             device_name=args.device_model,
             device_model=_misprice(device_model),
             step_slo_s=step_slo_s, obs=obs)

@@ -90,7 +90,19 @@ class _PhaseState:
 
 
 class PerfWatchdog:
-    """Detects priced-vs-observed drift and brokers the re-pricing loop."""
+    """Detects priced-vs-observed drift and brokers the re-pricing loop.
+
+    Invariants: the watchdog is detection-only — it never touches engine
+    state or request outputs, and the re-pricing it brokers is pure
+    admission policy (greedy outputs are schedule-independent, so a
+    re-price can change *when* requests run but never *what* they decode;
+    the bench's adaptive section gates that bit-identity).  It holds no
+    clock of its own: every timing it sees arrives as an ``elapsed_s``
+    measured by the serving loop on the injected run clock, so tests can
+    drive it deterministically and trace timestamps stay on the run's
+    timeline.  The only runtime cost it adds is the per-burst device sync
+    the loop performs to time bursts honestly — a pure wait,
+    output-neutral by construction."""
 
     def __init__(self, *, ewma_alpha: float = DEFAULT_EWMA_ALPHA,
                  drift_gate: float = DEFAULT_DRIFT_GATE,

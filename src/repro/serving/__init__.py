@@ -17,7 +17,8 @@ from .engine_loop import EngineLoop, SlotEngine
 from .kv_pool import KVPool
 from .placement import (PhaseCost, PlacementDecision, handoff_payload_bytes,
                         phase_cost, place_phases, prefill_network_spec)
-from .request import Request, RequestState, synthetic_workload
+from .request import (Request, RequestState, prefix_shared_workload,
+                      synthetic_workload)
 
 __all__ = [
     "ContinuousBatcher", "DisaggregatedEngineLoop", "EngineLoop",
@@ -25,6 +26,7 @@ __all__ = [
     "PlacementDecision", "Request", "RequestState", "ServeMetrics",
     "SlotEngine", "StreamDelta", "TokenSink", "decode_network_spec",
     "handoff_payload_bytes", "phase_cost", "phase_network_spec",
-    "place_phases", "prefill_network_spec", "sample_pools",
-    "step_time_model", "synthetic_workload", "token_budget_for_slo",
+    "place_phases", "prefill_network_spec", "prefix_shared_workload",
+    "sample_pools", "step_time_model", "synthetic_workload",
+    "token_budget_for_slo",
 ]

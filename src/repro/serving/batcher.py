@@ -11,6 +11,17 @@ per-step latency objective (decode SLO), and at the KV pool's free blocks.
 Eviction is deadline shedding: queued requests whose deadline has passed are
 DROPPED rather than admitted (they would miss their SLO anyway and only
 steal pool blocks from live traffic).
+
+When the pool runs prefix sharing, admission prices a request's *fresh*
+footprint: blocks the prefix index already serves are not drawn from the
+free list, and the skipped prefill tokens shorten the request's engine
+residency — so a shared prefix makes admission cheaper and more slots fit
+the same KV budget.
+
+Invariant: admission and re-pricing are pure *scheduling* policy.  Greedy
+per-request outputs depend only on the prompt and the model, never on the
+admission order, the token budget, or a mid-run re-price — every bench
+section gates this bit-identity.
 """
 from __future__ import annotations
 
@@ -249,10 +260,15 @@ class ContinuousBatcher:
                 continue
             if n_active + len(admitted) >= self.token_budget:
                 break
-            if not self.pool.can_admit(req.total_tokens):
+            # prefix sharing makes admission cheaper: only the blocks the
+            # prefix index cannot serve are drawn from the free list, so a
+            # mostly-shared request fits where a dense one would defer
+            prompt = req.prompt if self.pool.prefix_sharing else None
+            if not self.pool.can_admit(req.total_tokens, prompt):
                 i += 1                   # try to backfill a smaller request
                 continue
-            req.slot = self.pool.alloc(req.rid, req.total_tokens)
+            req.slot = self.pool.alloc(req.rid, req.total_tokens,
+                                       prompt=prompt)
             req.state = RequestState.PREFILL
             req.t_admitted = now
             admitted.append(queue.pop(i))

@@ -116,14 +116,30 @@ class DisaggregatedEngineLoop:
                  step_slo_s: Optional[float] = None,
                  handoff_link_bw: Optional[float] = None,
                  placement_engine_name: str = "xla",
+                 prefix_sharing: bool = False,
                  obs: Optional[Observability] = None):
+        if prefix_sharing:
+            if kv_layout != "paged":
+                raise ValueError("prefix sharing maps physical pages — it "
+                                 "requires kv_layout='paged'")
+            if any(t != "attn" for t in cfg.layer_types()):
+                raise ValueError(
+                    "prefix sharing requires an all-attention config: "
+                    "recurrent/cross layer state is slot-local and cannot "
+                    "be reconstructed from shared KV pages")
         self.cfg = cfg
         self.kv_layout = kv_layout
+        self.prefix_sharing = prefix_sharing
         self.obs = obs if obs is not None else Observability()
+        # each phase pool runs its own prefix index: the prefill index
+        # serves admission (prefill skipping), the decode index dedupes
+        # migrated prompts so sharers land only their unique pages
         prefill_pool = KVPool(n_prefill_slots, max_seq, block_size=block_size,
-                              total_blocks=prefill_total_blocks)
+                              total_blocks=prefill_total_blocks,
+                              prefix_sharing=prefix_sharing)
         decode_pool = KVPool(n_decode_slots, max_seq, block_size=block_size,
-                             total_blocks=decode_total_blocks)
+                             total_blocks=decode_total_blocks,
+                             prefix_sharing=prefix_sharing)
         self.prefill = SlotEngine(cfg, params, prefill_pool,
                                   kv_layout=kv_layout, name="prefill")
         self.decode = SlotEngine(cfg, params, decode_pool,
@@ -171,7 +187,8 @@ class DisaggregatedEngineLoop:
         decode engine's token budget or pool cannot take it yet."""
         if self.decode.n_active >= self.decode_batcher.token_budget:
             return False
-        if not self.decode.pool.can_admit(req.total_tokens):
+        prompt = req.prompt if self.decode.pool.prefix_sharing else None
+        if not self.decode.pool.can_admit(req.total_tokens, prompt):
             return False
         tracer = self.obs.tracer
         h = (tracer.begin("handoff", track="requests", tid=req.rid,
@@ -180,12 +197,26 @@ class DisaggregatedEngineLoop:
         state = self.prefill.export_slot(req.slot)
         written = self.prefill.pool.lease(req.rid).written_tokens
         self.prefill.release(req)
-        req.slot = self.decode.pool.alloc(req.rid, req.total_tokens)
+        req.slot = self.decode.pool.alloc(req.rid, req.total_tokens,
+                                          prompt=prompt)
+        # prefix coherence at the hand-off: blocks the decode-side index
+        # already serves are shared (refcounted) rather than re-imported —
+        # the snapshot's pages for them are dropped (bit-identical content
+        # by the index's token verification) and a dest-side COW tail takes
+        # its content from the snapshot page itself, so the pending pool
+        # copy is consumed without a device copy.
+        dst_lease = self.decode.pool.lease(req.rid)
+        skip = dst_lease.shared_tokens // self.decode.pool.block_size
+        self.decode.pool.consume_cow(req.rid)
         # the prefill engine already produced the first sample; the decode
         # engine owes the remaining gen - 1 steps
-        self.decode.adopt(req, state, steps_total=req.max_new_tokens - 1)
+        self.decode.adopt(req, state, steps_total=req.max_new_tokens - 1,
+                          skip_blocks=skip)
         # carry the KV-write accounting into the decode pool's ledger
-        self.decode.pool.note_write(req.rid, min(written, req.total_tokens))
+        # (the lease already counts its shared tokens as written)
+        self.decode.pool.note_write(
+            req.rid,
+            min(written, req.total_tokens) - dst_lease.written_tokens)
         req.state = RequestState.DECODE
         self.decode_batcher.n_admitted += 1      # migration ledger
 
@@ -258,9 +289,13 @@ class DisaggregatedEngineLoop:
             queue, self.prefill.n_active, now)
         metrics.drop(len(decision.dropped))
         for req in decision.admitted:
-            # the first sample lands after plen steps; the rest of the
-            # generation belongs to the decode engine
-            self.prefill.bind(req, steps_total=req.prompt_len)
+            # the first sample lands after plen steps (minus any
+            # prefix-shared tokens, skipped by binding at an offset); the
+            # rest of the generation belongs to the decode engine
+            shared = self.prefill.pool.shared_tokens(req.rid)
+            req.shared_tokens = shared
+            self.prefill.bind(req, start_pos=shared,
+                              steps_total=req.prompt_len - shared)
         trace_admission(self.obs, self.prefill_batcher, decision,
                         self.prefill.n_active)
 
@@ -375,7 +410,7 @@ class DisaggregatedEngineLoop:
         for s, req in enumerate(self.prefill.slots):
             if req is None or req.rid in ready_rids:
                 continue
-            req.n_fed = int(self.prefill.steps_done[s])
+            req.n_fed = int(self.prefill.steps_done[s]) + req.shared_tokens
             if self.prefill.steps_done[s] >= self.prefill.steps_total[s]:
                 # the burst containing the first sample has been dispatched
                 req.state = RequestState.DECODE

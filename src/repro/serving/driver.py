@@ -288,6 +288,16 @@ class OpenLoopDriver:
     Owns the arrival drain, the idle fast-forward skew clock, the
     throttle/budget plumbing into :func:`burst_size`, the per-iteration
     metric sampling and the run-level metrics; the loop owns the engines.
+
+    Invariants: all time comes from the injected ``now_fn`` — the driver
+    installs the derived skew clock into the tracer at run start, so every
+    metric stamp and trace timestamp lives on one timeline and tests can
+    drive the whole loop on a virtual clock (no hidden wall-time reads).
+    Scheduling decisions (admission order, burst sizes, throttles,
+    re-prices) affect only timing: per-request greedy outputs depend on
+    the prompt and the model alone, streamed deltas concatenate to exactly
+    the completion-pull rows, and ``ttft_dispatch <= ttft`` holds for
+    every request.
     """
 
     def __init__(self, loop):

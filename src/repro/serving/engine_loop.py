@@ -83,7 +83,8 @@ def trace_admission(obs, batcher, decision, n_active: int) -> None:
                               "token_budget": batcher.token_budget,
                               "phase": batcher.phase,
                               "blocks": batcher.pool.blocks_needed(
-                                  req.total_tokens)})
+                                  req.total_tokens),
+                              "shared_tokens": req.shared_tokens})
     for req in decision.dropped:
         tracer.instant("dropped", track="requests", tid=req.rid,
                        cat="request",
@@ -153,6 +154,17 @@ class SlotEngine:
     `decode_step`'s, so outputs are bit-identical whether a request lives
     its whole life in one SlotEngine (colocated) or is exported from a
     prefill engine and imported into a decode engine mid-flight.
+
+    Invariants: under the paged layout the pool's lease order IS the block
+    table — :meth:`bind` uploads ``KVPool.block_table`` verbatim, so
+    logical block ``j`` of a slot always resolves through lease entry
+    ``j`` (prefix sharing changes *which* physical pages a lease maps, not
+    this contract).  The engine writes KV only at each slot's current
+    position, so pages behind ``pos`` are immutable — what makes published
+    prefix pages safe to share — and pending COW copies are materialized
+    in :meth:`bind` before the slot's first write.  The engine never reads
+    the host clock: burst timing is the caller's concern (injected
+    clocks), and :meth:`sync` is a pure wait that cannot change outputs.
     """
 
     # largest scanned burst compiled; bounds compile count (power-of-two
@@ -233,18 +245,53 @@ class SlotEngine:
     def active_requests(self):
         return (r for r in self.slots if r is not None)
 
-    def bind(self, req: Request, *, steps_total: int) -> None:
+    def copy_page(self, src: int, dst: int) -> None:
+        """Copy-on-write: duplicate one physical KV page (every attention
+        layer's K and V arena) so a writer diverging inside a shared tail
+        page gets a private copy before its first write."""
+        if self.kv_layout != "paged":
+            raise ValueError("copy_page needs the paged KV layout")
+
+        def one(c, stacked):
+            if isinstance(c, dict) and "k" in c:
+                if stacked:
+                    return jax.tree.map(
+                        lambda a: a.at[:, dst].set(a[:, src]), c)
+                return jax.tree.map(lambda a: a.at[dst].set(a[src]), c)
+            return c
+
+        blocks, rem = self.cache["layers"]
+        cache = dict(self.cache)
+        cache["layers"] = (tuple(one(c, True) for c in blocks),
+                           tuple(one(c, False) for c in rem))
+        self.cache = cache
+
+    def bind(self, req: Request, *, steps_total: int,
+             start_pos: int = 0) -> None:
         """Upload the request's prompt into its slot and reset per-request
         state (position counter + recurrent SSM states; attention KV rows
         need no clearing — per-slot position masks hide stale entries).
         ``steps_total`` is the number of engine steps this request runs on
-        THIS engine (plen + gen - 1 colocated; plen for a prefill phase)."""
+        THIS engine (plen + gen - 1 colocated; plen for a prefill phase —
+        each minus the shared prefix under prefix sharing).
+
+        ``start_pos`` > 0 binds at an offset (prefix sharing): positions
+        ``[0, start_pos)`` are already served by shared pages in the
+        slot's block table, so the first fed token is
+        ``prompt[start_pos]`` and prefill for the shared prefix is
+        skipped.  Pending COW page copies are materialized here, before
+        the slot's first write."""
+        if start_pos and self.kv_layout != "paged":
+            raise ValueError("bind at an offset (prefix sharing) requires "
+                             "the paged KV layout")
         s = req.slot
         row = np.zeros((self.max_prompt,), np.int32)
         row[:req.prompt_len] = req.prompt
         self._prompts = self._prompts.at[s].set(jnp.asarray(row))
         self._plens = self._plens.at[s].set(req.prompt_len)
         if self.kv_layout == "paged":
+            for src, dst in self.pool.consume_cow(req.rid):
+                self.copy_page(src, dst)
             # upload the slot's logical->physical page map (lease order IS
             # the block table)
             table = self.pool.block_table(
@@ -254,6 +301,10 @@ class SlotEngine:
                 jnp.asarray(table))
             self.cache = cache
         self.cache = T.reset_slot_state(self.cfg, self.cache, s)
+        if start_pos:
+            cache = dict(self.cache)
+            cache["pos"] = cache["pos"].at[s].set(start_pos)
+            self.cache = cache
         self.slots[s] = req
         self.steps_done[s] = 0
         self.steps_total[s] = steps_total
@@ -355,7 +406,8 @@ class SlotEngine:
         return state
 
     def import_slot(self, s: int, state: Dict, *,
-                    dest_blocks: Optional[List[int]] = None) -> None:
+                    dest_blocks: Optional[List[int]] = None,
+                    skip_blocks: int = 0) -> None:
         """Install an exported slot snapshot into slot ``s`` (bit-exact:
         the imported request decodes the same tokens it would have
         produced had it stayed on the exporting engine).
@@ -367,6 +419,9 @@ class SlotEngine:
         pages land in this engine's arena at ``dest_blocks`` (the slot's
         new lease, logical order) and the slot's block table is rebuilt
         from that lease — physical page ids never migrate across engines.
+        ``skip_blocks`` leading logical pages are NOT landed (prefix
+        sharing: the destination lease already maps them onto shared
+        pages holding bit-identical content, which must not be written).
         """
         layout = state.get("layout", "dense")
         if layout != self.kv_layout:
@@ -400,10 +455,12 @@ class SlotEngine:
                 raise ValueError(
                     f"snapshot carries {n_used} written pages but the "
                     f"destination lease holds {len(dest_blocks)} blocks")
-            phys = jnp.asarray(np.asarray(dest_blocks[:n_used], np.int32))
+            skip = min(skip_blocks, n_used)
+            phys = jnp.asarray(np.asarray(dest_blocks[skip:n_used],
+                                          np.int32))
             set_arena = {
-                True: lambda a, v: a.at[:, phys].set(v),
-                False: lambda a, v: a.at[phys].set(v),
+                True: lambda a, v: a.at[:, phys].set(v[:, skip:n_used]),
+                False: lambda a, v: a.at[phys].set(v[skip:n_used]),
             }
         else:
             set_arena = None
@@ -435,14 +492,17 @@ class SlotEngine:
         self._last_tok = self._last_tok.at[s].set(state["last_tok"])
         self._out_buf = self._out_buf.at[s].set(state["out_row"])
 
-    def adopt(self, req: Request, state: Dict, *, steps_total: int) -> None:
+    def adopt(self, req: Request, state: Dict, *, steps_total: int,
+              skip_blocks: int = 0) -> None:
         """Take over a migrated request: install its snapshot into the slot
         the pool already assigned (``req.slot``) and reset the per-slot
-        schedule for the steps this engine owes."""
+        schedule for the steps this engine owes.  ``skip_blocks`` passes
+        through to :meth:`import_slot` (prefix-shared leading pages)."""
         s = req.slot
         dest = (self.pool.lease(req.rid).blocks
                 if self.kv_layout == "paged" else None)
-        self.import_slot(s, state, dest_blocks=dest)
+        self.import_slot(s, state, dest_blocks=dest,
+                         skip_blocks=skip_blocks)
         self.slots[s] = req
         self.steps_done[s] = 0
         self.steps_total[s] = steps_total
@@ -473,12 +533,24 @@ class EngineLoop:
                  device_model=None,
                  step_slo_s: Optional[float] = None,
                  token_budget: Optional[int] = None,
+                 prefix_sharing: bool = False,
                  obs: Optional[Observability] = None):
+        if prefix_sharing:
+            if kv_layout != "paged":
+                raise ValueError("prefix sharing maps physical pages — it "
+                                 "requires kv_layout='paged'")
+            if any(t != "attn" for t in cfg.layer_types()):
+                raise ValueError(
+                    "prefix sharing requires an all-attention config: "
+                    "recurrent/cross layer state is slot-local and cannot "
+                    "be reconstructed from shared KV pages")
         self.cfg = cfg
         self.kv_layout = kv_layout
+        self.prefix_sharing = prefix_sharing
         self.obs = obs if obs is not None else Observability()
         self.pool = KVPool(n_slots, max_seq, block_size=block_size,
-                           total_blocks=total_blocks)
+                           total_blocks=total_blocks,
+                           prefix_sharing=prefix_sharing)
         self.batcher = ContinuousBatcher(
             cfg, self.pool, device_name=device_name,
             device_model=device_model, step_slo_s=step_slo_s,
@@ -532,9 +604,14 @@ class EngineLoop:
         for req in decision.admitted:
             # greedy decoding with known lengths: completion is
             # deterministic — the final sample lands after
-            # plen + gen - 1 active steps
-            self.engine.bind(req, steps_total=(req.prompt_len
-                                               + req.max_new_tokens - 1))
+            # plen + gen - 1 active steps (minus any prefix-shared
+            # tokens, whose prefill is skipped by binding at an offset)
+            shared = self.pool.shared_tokens(req.rid)
+            req.shared_tokens = shared
+            self.engine.bind(
+                req, start_pos=shared,
+                steps_total=(req.prompt_len - shared
+                             + req.max_new_tokens - 1))
         trace_admission(self.obs, self.batcher, decision,
                         self.engine.n_active)
 
@@ -602,7 +679,9 @@ class EngineLoop:
         for s, req in enumerate(eng.slots):
             if req is None:
                 continue
-            req.n_fed = int(eng.steps_done[s])
+            # shared-prefix tokens count as fed: the KV exists and the
+            # feed pointer started past them
+            req.n_fed = int(eng.steps_done[s]) + req.shared_tokens
             if (req.state is RequestState.PREFILL
                     and req.n_fed >= req.prompt_len):
                 # the burst containing the first sample has been dispatched

@@ -39,6 +39,10 @@ class Request:
 
     state: RequestState = RequestState.QUEUED
     slot: Optional[int] = None
+    # prompt tokens served from shared KV pages (prefix sharing): prefill
+    # for these is skipped by binding at an offset, and n_fed counts them
+    # as fed so samples_ready stays engine-independent
+    shared_tokens: int = 0
     n_fed: int = 0                      # engine steps fed so far (all phases)
     n_streamed: int = 0                 # samples already delivered as deltas
     output: List[int] = dataclasses.field(default_factory=list)
@@ -118,6 +122,45 @@ def synthetic_workload(
         plen = int(rng.choice(prompt_lens))
         glen = int(rng.choice(gen_lens))
         prompt = rng.integers(0, vocab, size=(plen,), dtype=np.int32)
+        reqs.append(Request(
+            rid=rid, prompt=prompt, max_new_tokens=glen, arrival=t,
+            deadline=None if deadline_s is None else t + deadline_s))
+    return reqs
+
+
+def prefix_shared_workload(
+    n_requests: int,
+    *,
+    rate: float,
+    vocab: int,
+    shared_prefix_len: int,
+    shared_frac: float = 0.9,
+    suffix_lens: Sequence[int] = (8, 16),
+    gen_lens: Sequence[int] = (4, 8, 16),
+    seed: int = 0,
+    deadline_s: Optional[float] = None,
+) -> List[Request]:
+    """Open-loop arrivals where ``shared_frac`` of requests front-load one
+    common ``shared_prefix_len``-token prompt prefix (the chat/agent
+    system-prompt pattern prefix sharing exploits); the rest are fully
+    unique.  Every suffix is unique, so sharers still diverge after the
+    prefix."""
+    rng = np.random.default_rng(seed)
+    common = rng.integers(0, vocab, size=(shared_prefix_len,),
+                          dtype=np.int32)
+    t = 0.0
+    reqs = []
+    for rid in range(n_requests):
+        t += float(rng.exponential(1.0 / rate)) if rate > 0 else 0.0
+        slen = int(rng.choice(suffix_lens))
+        glen = int(rng.choice(gen_lens))
+        suffix = rng.integers(0, vocab, size=(slen,), dtype=np.int32)
+        if rng.random() < shared_frac:
+            prompt = np.concatenate([common, suffix])
+        else:
+            unique = rng.integers(0, vocab, size=(shared_prefix_len,),
+                                  dtype=np.int32)
+            prompt = np.concatenate([unique, suffix])
         reqs.append(Request(
             rid=rid, prompt=prompt, max_new_tokens=glen, arrival=t,
             deadline=None if deadline_s is None else t + deadline_s))

@@ -1,0 +1,113 @@
+"""Docs consistency gate.
+
+Documentation drifts the moment nobody fails CI over it, so this module
+cross-checks the prose against the code it describes:
+
+* every flag a CLI parser actually exposes appears in ``docs/cli.md``
+  (serve, profile, and the regression gate — all three export
+  ``build_parser()`` precisely so this test can introspect them);
+* every ``src/repro/*`` package appears in ``docs/architecture.md``'s
+  module map;
+* every intra-repo markdown link in ``README.md`` and ``docs/`` resolves
+  to a real file, and anchored links resolve to a real heading.
+"""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+import pytest
+
+from benchmarks import check_regression
+from repro.launch import profile as profile_cli
+from repro.launch import serve as serve_cli
+
+REPO = Path(__file__).resolve().parent.parent
+DOCS = REPO / "docs"
+
+DOC_FILES = [REPO / "README.md", DOCS / "architecture.md", DOCS / "cli.md"]
+
+PARSERS = {
+    "repro.launch.serve": serve_cli.build_parser,
+    "repro.launch.profile": profile_cli.build_parser,
+    "benchmarks.check_regression": check_regression.build_parser,
+}
+
+
+def _flags(build_parser) -> list:
+    """Every long option string the parser exposes, minus --help."""
+    out = []
+    for action in build_parser()._actions:
+        out.extend(s for s in action.option_strings
+                   if s.startswith("--") and s != "--help")
+    return out
+
+
+def test_docs_exist():
+    for path in DOC_FILES:
+        assert path.is_file(), f"missing doc: {path.relative_to(REPO)}"
+
+
+@pytest.mark.parametrize("prog", sorted(PARSERS))
+def test_every_cli_flag_documented(prog):
+    text = (DOCS / "cli.md").read_text(encoding="utf-8")
+    missing = [f for f in _flags(PARSERS[prog]) if f not in text]
+    assert not missing, (
+        f"{prog} flags missing from docs/cli.md: {missing} — "
+        "document them (tables in docs/cli.md) or drop the flag")
+
+
+@pytest.mark.parametrize("prog", sorted(PARSERS))
+def test_no_phantom_flags_documented(prog):
+    """Flags documented under a CLI's section must all still exist
+    somewhere in that CLI (catches docs outliving a removed flag)."""
+    real = {f for build in PARSERS.values() for f in _flags(build)}
+    text = (DOCS / "cli.md").read_text(encoding="utf-8")
+    documented = set(re.findall(r"`(--[a-z][a-z0-9-]*)\b", text))
+    phantom = documented - real
+    assert not phantom, f"docs/cli.md documents nonexistent flags: {phantom}"
+
+
+def test_every_package_in_module_map():
+    text = (DOCS / "architecture.md").read_text(encoding="utf-8")
+    packages = sorted(p.parent.name
+                      for p in (REPO / "src" / "repro").glob("*/__init__.py"))
+    assert packages, "no src/repro packages found — wrong repo layout?"
+    missing = [p for p in packages
+               if f"src/repro/{p}/" not in text]
+    assert not missing, (
+        f"packages missing from docs/architecture.md module map: {missing}")
+
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def _github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markup, lowercase, drop punctuation,
+    spaces to hyphens."""
+    s = heading.replace("`", "").strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def _anchors(path: Path) -> set:
+    return {_github_slug(h)
+            for h in _HEADING.findall(path.read_text(encoding="utf-8"))}
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: p.name)
+def test_intra_repo_links_resolve(doc):
+    text = doc.read_text(encoding="utf-8")
+    bad = []
+    for target in _LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, fragment = target.partition("#")
+        resolved = (doc.parent / path_part).resolve() if path_part else doc
+        if not resolved.exists():
+            bad.append(f"{target} (file missing)")
+        elif fragment and resolved.suffix == ".md" \
+                and fragment not in _anchors(resolved):
+            bad.append(f"{target} (no such heading)")
+    assert not bad, f"{doc.relative_to(REPO)} has dead links: {bad}"

@@ -103,6 +103,60 @@ def test_pool_churn_never_leaks_and_fragmentation_never_blocks():
     assert pool.free_slot_count == 6
 
 
+def test_pool_shared_churn_conserves_refcounts():
+    """The churn property under prefix sharing: blocks may now be held by
+    several leases (plus pending COW source refs), so the conservation law
+    becomes refcounted — free + distinct-referenced == total, and every
+    block's refcount equals exactly the number of leases holding it plus
+    the pending COW copies sourcing from it.  Admission still never fails
+    on a fit (fresh blocks, not total blocks, are what an admit draws)."""
+    rng = np.random.default_rng(3)
+    pool = KVPool(n_slots=6, max_seq=64, block_size=8, total_blocks=32,
+                  prefix_sharing=True)
+    families = [tuple(int(t) for t in rng.integers(0, 997, size=(16,)))
+                for _ in range(3)]
+    live = {}
+    for step in range(400):
+        if live and (rng.random() < 0.45 or len(live) == 6):
+            rid = rng.choice(list(live))
+            pool.free(rid)
+            del live[rid]
+        else:
+            rid = 1000 + step
+            prefix = families[int(rng.integers(0, 3))]
+            suffix = tuple(int(t) for t in rng.integers(
+                1000, 2000, size=(int(rng.integers(1, 17)),)))
+            prompt = prefix + suffix
+            n = min(len(prompt) + int(rng.integers(0, 17)), pool.max_seq)
+            fits = (pool.free_slot_count > 0
+                    and pool.fresh_blocks_needed(n, prompt)
+                    <= pool.free_block_count)
+            assert pool.can_admit(n, prompt) == fits
+            if fits:
+                pool.alloc(rid, n, prompt=prompt)
+                live[rid] = n
+                if rng.random() < 0.5:
+                    pool.consume_cow(rid)    # engine materialized the copy
+                lease = pool.lease(rid)
+                room = lease.reserved_tokens - lease.written_tokens
+                pool.note_write(rid, int(rng.integers(0, room + 1)))
+        held = {}
+        for r in live:
+            for b in pool.lease(r).blocks:
+                held[b] = held.get(b, 0) + 1
+        for ops in pool._pending_cow.values():
+            for src, _ in ops:
+                held[src] = held.get(src, 0) + 1
+        assert held == pool._block_refs      # refcounts exactly account
+        assert (pool.free_block_count + len(pool._block_refs)
+                == pool.total_blocks)        # conservation, shared or not
+    for rid in list(live):
+        pool.free(rid)
+    assert pool.free_block_count == pool.total_blocks
+    assert pool.free_slot_count == 6
+    assert pool._block_refs == {} and pool._prefix_index == {}
+
+
 # ------------------------------------------- bitwise decode equivalence
 def test_paged_decode_step_bitwise_matches_dense(tiny_params):
     """decode_step_slots_paged == decode_step_slots bit-for-bit across

@@ -1,0 +1,277 @@
+"""Prefix sharing with copy-on-write KV pages: index publication rules,
+hash-collision safety, COW placement at the first divergent token,
+refcount lifetimes across donor/sharer frees, bitwise shared-vs-unshared
+engine identity, and the regression-gate schema for the bench's
+``prefix`` section."""
+import jax
+import numpy as np
+import pytest
+
+from benchmarks import check_regression as cr
+from repro.models import transformer as T
+from repro.serving import KVPool, Request, SlotEngine
+
+TINY = T.ModelConfig(
+    name="prefix-tiny", n_layers=3, d_model=32, n_heads=4, n_kv_heads=2,
+    d_ff=64, vocab=64, attention_impl="dot", remat=False)
+
+MAX_LEN = 32
+BS = 8
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return T.init_params(jax.random.PRNGKey(0), TINY)
+
+
+def _pool(**kw):
+    kw.setdefault("prefix_sharing", True)
+    return KVPool(n_slots=4, max_seq=MAX_LEN, block_size=BS, **kw)
+
+
+# ------------------------------------------------------- index publication
+def test_publication_tracks_written_full_prompt_blocks():
+    """A block enters the index only once every one of its positions is
+    both inside the prompt and actually written — sharing can never serve
+    KV that does not exist yet."""
+    pool = _pool()
+    donor = tuple(range(24))             # 3 full blocks
+    pool.alloc(1, 28, prompt=donor)
+    probe = donor + (60, 61)             # longer twin, so no plen-1 cap
+    assert pool.shared_prefix_tokens(probe) == 0     # nothing written
+    pool.note_write(1, BS - 1)
+    assert pool.shared_prefix_tokens(probe) == 0     # block 0 not full
+    pool.note_write(1, 1)
+    assert pool.shared_prefix_tokens(probe) == BS    # block 0 published
+    pool.note_write(1, 16)
+    assert pool.shared_prefix_tokens(probe) == 24    # all prompt blocks
+    # the donor's own prompt is capped at plen-1: the engine must feed the
+    # last prompt token to produce the first sample
+    assert pool.shared_prefix_tokens(donor) == 23
+
+
+def test_generated_tokens_are_never_published():
+    """Blocks past the prompt hold sampled KV, not prompt KV — they must
+    never enter the index even once fully written."""
+    pool = _pool()
+    donor = tuple(range(8))              # exactly 1 block of prompt
+    pool.alloc(1, 24, prompt=donor)
+    pool.note_write(1, 24)               # prompt + 16 generated tokens
+    probe = donor + tuple(range(8, 24))
+    assert pool.shared_prefix_tokens(probe) == BS    # prompt block only
+
+
+def test_hash_collision_misses_never_false_shares():
+    """With every chain key colliding, lookups still verify parent + the
+    full token tuple — a different prompt shares nothing, an identical
+    one still shares."""
+    pool = _pool(prefix_hash=lambda parent, tokens: 7)
+    donor = tuple(range(16))
+    pool.alloc(1, 20, prompt=donor)
+    pool.note_write(1, 16)
+    assert len(pool._prefix_index) == 1              # one bucket, key 7
+    assert len(pool._prefix_index[7]) == 2           # both depths collide
+    other = tuple(range(30, 46))         # differs from token 0 on
+    assert pool.shared_prefix_tokens(other) == 0
+    twin = donor + (50, 51)
+    assert pool.shared_prefix_tokens(twin) == 16
+    slot = pool.alloc(2, 20, prompt=twin)
+    assert slot != pool.lease(1).slot
+    assert pool.lease(2).shared_tokens == 16
+    assert pool.lease(2).blocks[:2] == pool.lease(1).blocks[:2]
+
+
+# ------------------------------------------------------------ COW placement
+@pytest.mark.parametrize("divergence", [BS * 2 - 1, BS * 2, BS * 2 + 1])
+def test_cow_triggered_exactly_at_first_divergent_token(divergence):
+    """A sharer diverging at token d shares exactly d tokens; a COW page
+    copy is scheduled iff d falls mid-block, sourced from the donor's page
+    holding position d into the sharer's own fresh page."""
+    pool = _pool()
+    donor = tuple(range(24))
+    pool.alloc(1, 28, prompt=donor)
+    pool.note_write(1, 24)
+    sharer = donor[:divergence] + tuple(
+        55 + i for i in range(4))        # diverges exactly at `divergence`
+    pool.alloc(2, len(sharer) + 4, prompt=sharer)
+    lease = pool.lease(2)
+    assert lease.shared_tokens == divergence
+    ops = pool.consume_cow(2)
+    if divergence % BS == 0:
+        assert ops == []                 # boundary divergence: no hazard
+    else:
+        src_block = pool.lease(1).blocks[divergence // BS]
+        dst_block = lease.blocks[divergence // BS]
+        assert ops == [(src_block, dst_block)]
+        assert dst_block not in pool.lease(1).blocks  # private copy
+    pool.free(2)
+
+
+def test_unconsumed_cow_source_ref_released_on_free():
+    """free() drops the pending COW source's extra ref, so an admitted-
+    then-cancelled sharer cannot leak the donor's page."""
+    pool = _pool()
+    donor = tuple(range(24))
+    pool.alloc(1, 28, prompt=donor)
+    pool.note_write(1, 24)
+    sharer = donor[:20] + (60, 61, 62, 63)
+    pool.alloc(2, 28, prompt=sharer)
+    src = pool.lease(1).blocks[2]
+    assert pool._block_refs[src] == 2    # donor + pending COW ref
+    pool.free(2)                         # COW never consumed
+    assert pool._block_refs[src] == 1
+    assert pool.free_block_count + len(pool._block_refs) == pool.total_blocks
+
+
+# -------------------------------------------------------- refcount lifetime
+def test_shared_blocks_survive_donor_free():
+    """Refcounts, not ownership, decide a block's lifetime: the donor
+    freeing first leaves the shared pages (and their index entries) alive
+    for the sharer; the last holder freeing evicts and recycles them."""
+    pool = _pool()
+    donor = tuple(range(16))
+    pool.alloc(1, 24, prompt=donor)
+    pool.note_write(1, 16)
+    twin = donor + (40, 41, 42, 43)
+    pool.alloc(2, 24, prompt=twin)
+    shared = pool.lease(2).blocks[:2]
+    pool.free(1)
+    assert all(pool._block_refs[b] == 1 for b in shared)
+    late = donor + (50, 51)              # donor gone, index still serves
+    assert pool.shared_prefix_tokens(late) == 16
+    pool.free(2)
+    assert pool._block_refs == {}
+    assert pool._prefix_index == {}
+    assert pool.free_block_count == pool.total_blocks
+
+
+# --------------------------------------------- engine-level bitwise identity
+def _serve_one(eng, pool, rid, prompt, gen, *, sharing):
+    """Admit + bind + run one request to completion on a SlotEngine,
+    leaving its lease alive (so its published pages stay indexed) but its
+    slot inactive.  Returns the greedy output tokens."""
+    req = Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                  max_new_tokens=gen)
+    total = req.prompt_len + gen
+    req.slot = pool.alloc(rid, total,
+                          prompt=tuple(prompt) if sharing else None)
+    shared = pool.shared_tokens(rid) if sharing else 0
+    eng.bind(req, steps_total=req.prompt_len - shared + gen - 1,
+             start_pos=shared)
+    s = req.slot
+    while eng.steps_done[s] < eng.steps_total[s]:
+        eng.dispatch(1, eng.active)
+    eng.active[s] = False                # keep the lease (and the index)
+    return eng.pull_output(s)[:gen].tolist(), shared
+
+
+def test_shared_vs_unshared_bitwise_identical_with_cow_tail(tiny_params):
+    """The gated correctness claim, at engine level: a sharer mapping 2
+    full blocks + a 4-token COW tail onto a live donor's pages decodes
+    exactly the tokens it produces with sharing off — the shared pages
+    hold bit-identical KV to what the sharer would have written itself."""
+    rng = np.random.default_rng(5)
+    donor_p = rng.integers(0, TINY.vocab, size=(24,))
+    sharer_p = np.concatenate([donor_p[:20],
+                               rng.integers(0, TINY.vocab, size=(4,))])
+
+    ref = {}
+    for rid, (p, g) in enumerate([(donor_p, 4), (sharer_p, 4)]):
+        pool = KVPool(n_slots=2, max_seq=MAX_LEN, block_size=BS)
+        eng = SlotEngine(TINY, tiny_params, pool, kv_layout="paged")
+        ref[rid], _ = _serve_one(eng, pool, rid, p, g, sharing=False)
+
+    pool = _pool()
+    eng = SlotEngine(TINY, tiny_params, pool, kv_layout="paged")
+    out_donor, shared_d = _serve_one(eng, pool, 0, donor_p, 4, sharing=True)
+    out_sharer, shared_s = _serve_one(eng, pool, 1, sharer_p, 4,
+                                      sharing=True)
+    assert shared_d == 0                 # empty index at donor admission
+    assert shared_s == 20                # 2 full blocks + 4-token COW tail
+    assert pool.cow_copies == 1
+    assert pool.tokens_prefill_skipped == 20
+    assert out_donor == ref[0]
+    assert out_sharer == ref[1]
+    # the sharer's first two logical pages ARE the donor's physical pages
+    assert pool.lease(1).blocks[:2] == pool.lease(0).blocks[:2]
+    assert pool.lease(1).blocks[2] != pool.lease(0).blocks[2]
+
+
+def test_shared_vs_unshared_identical_at_block_boundary(tiny_params):
+    """Same contract when the divergence lands exactly on a block
+    boundary: full-block sharing only, no COW copy at all."""
+    rng = np.random.default_rng(9)
+    donor_p = rng.integers(0, TINY.vocab, size=(24,))
+    sharer_p = np.concatenate([donor_p[:16],
+                               rng.integers(0, TINY.vocab, size=(6,))])
+
+    pool_ref = KVPool(n_slots=2, max_seq=MAX_LEN, block_size=BS)
+    eng_ref = SlotEngine(TINY, tiny_params, pool_ref, kv_layout="paged")
+    ref, _ = _serve_one(eng_ref, pool_ref, 0, sharer_p, 5, sharing=False)
+
+    pool = _pool()
+    eng = SlotEngine(TINY, tiny_params, pool, kv_layout="paged")
+    _serve_one(eng, pool, 0, donor_p, 4, sharing=True)
+    out, shared = _serve_one(eng, pool, 1, sharer_p, 5, sharing=True)
+    assert shared == 16 and pool.cow_copies == 0
+    assert out == ref
+
+
+# ------------------------------------------------- regression-gate schema
+def _good_prefix_section():
+    summ = {"tok_per_s": 100.0, "ttft_p50_s": 0.01, "tokens_out": 10,
+            "requests_done": 2}
+
+    def entry(ratio):
+        return {
+            "unshared": dict(summ), "shared": dict(summ),
+            "peak_slots_unshared": 8, "peak_slots_shared": int(8 * ratio),
+            "admitted_slots_ratio": ratio, "ttft_p50_ratio": ratio,
+            "tok_per_s_ratio": 1.1, "prefix_hits": 12,
+            "tokens_prefill_skipped": 500, "cow_copies": 1,
+            "bit_identical": True,
+        }
+
+    return {
+        "block_size": 16, "blocks_per_slot": 5, "n_slots": 16,
+        "total_blocks": 40, "dense_equivalent_slots": 8,
+        "shared_prefix_len": 48, "n_requests": 32,
+        "shared_frac_50": entry(1.25), "shared_frac_90": entry(1.75),
+        "all_identical": True,
+    }
+
+
+def test_validate_prefix_accepts_well_formed_section():
+    checks = cr.validate_prefix({"prefix": _good_prefix_section()})
+    assert checks and all(ok for _, ok, _ in checks)
+
+
+@pytest.mark.parametrize("mutate,name", [
+    (lambda s: s.clear(), "prefix section schema"),
+    (lambda s: s.pop("shared_frac_90"), "prefix section schema"),
+    (lambda s: s["shared_frac_50"].pop("unshared"),
+     "prefix section schema"),
+    (lambda s: s["shared_frac_90"].update(admitted_slots_ratio=None),
+     "prefix section schema"),
+    (lambda s: (s["shared_frac_90"].update(bit_identical=False),
+                s.update(all_identical=False)),
+     "shared outputs bit-identical to unshared"),
+    (lambda s: s["shared_frac_90"].update(prefix_hits=0),
+     "prefix cache actually shared pages"),
+    (lambda s: s["shared_frac_90"].update(admitted_slots_ratio=1.0,
+                                          ttft_p50_ratio=1.0),
+     "prefix sharing capacity win"),
+])
+def test_validate_prefix_fails_malformed_or_regressed(mutate, name):
+    section = _good_prefix_section()
+    mutate(section)
+    checks = cr.validate_prefix({"prefix": section})
+    failed = [n for n, ok, _ in checks if not ok]
+    assert any(name in n for n in failed), (failed, name)
+
+
+def test_validate_prefix_missing_section_fails():
+    checks = cr.validate_prefix({})
+    assert len(checks) == 1
+    name, ok, _ = checks[0]
+    assert name == "prefix section present" and not ok

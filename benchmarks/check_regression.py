@@ -47,6 +47,13 @@ bench's injected admission mispricing the watchdog must have fired
 saturation throughput and p50 TTFT bit-identically, and tracer+watchdog
 throughput must hold the same overhead floor as the NullTracer bound.
 
+The ``multidevice`` section must be present and well-formed: every leg
+bit-identical to colocated serving, and — when the run saw two distinct
+devices — the async hand-off must hide at least half the transfer stall
+the blocking baseline pays, distinct-device throughput must hold the
+shared-device floor, and the watchdog-actuated mid-run migration must
+complete every request with >=1 in-flight slot live-migrated.
+
 ``--trace trace.json`` gates a Chrome trace-event file written by
 ``serve --trace`` (``--fresh`` becomes optional): strict JSON (NaN and
 Infinity literals rejected), non-empty well-formed ``traceEvents``, no
@@ -429,6 +436,146 @@ def validate_adaptive(fresh: dict) -> List[Tuple[str, bool, str]]:
     return checks
 
 
+# the multidevice section: real per-phase device assignment + the async
+# hand-off.  The overlap and throughput gates apply when the run actually
+# saw two distinct devices (the bench child forces two host devices; a
+# degraded single-device run keeps schema + bit-identity gates only): the
+# double-buffered hand-off must hide at least half the transfer stall the
+# blocking baseline pays (async/sync stall ratio, gated only when the
+# sync baseline's stall clears an absolute measurement floor), and the
+# distinct assignment must not lose throughput against the same disagg
+# loop sharing one device.  The watchdog-actuated migration leg is gated
+# in both worlds — its trigger is the mispriced device *model*, not the
+# device count: every request completes, at least one in-flight slot
+# live-migrates, and outputs stay bit-identical to colocated serving.
+MULTIDEVICE_STALL_CEILING = 0.5
+MULTIDEVICE_STALL_FLOOR_S = 1e-3
+
+_MULTIDEVICE_NUMERIC_KEYS = ("n_devices", "tok_per_s_ratio_vs_colocated",
+                             "tok_per_s_ratio_vs_sync",
+                             "tok_per_s_ratio_vs_shared", "sync_stall_s",
+                             "async_stall_s", "async_overlap_s",
+                             "stall_ratio")
+_MULTIDEVICE_BOOL_KEYS = ("distinct_devices", "bit_identical_async",
+                          "bit_identical_sync", "bit_identical_shared",
+                          "all_identical", "forced_subprocess")
+_MULTIDEVICE_SUMMARIES = ("colocated", "disagg_async", "disagg_sync",
+                          "disagg_shared_device")
+_MIGRATION_NUMERIC_KEYS = ("n_requests", "n_done", "n_dropped",
+                           "n_live_migrations", "n_alerts")
+_MIGRATION_BOOL_KEYS = ("requests_preserved", "bit_identical")
+
+
+def validate_multidevice(fresh: dict, *,
+                         threshold: float) -> List[Tuple[str, bool, str]]:
+    """Schema + correctness checks for the ``multidevice`` section: async
+    hand-off overlap vs the blocking baseline, distinct-device throughput
+    vs the shared-device loop, and mid-run migration preserving in-flight
+    slots — every leg bit-identical to colocated serving."""
+    checks: List[Tuple[str, bool, str]] = []
+    section = fresh.get("multidevice")
+    if not isinstance(section, dict):
+        return [("multidevice section present", False,
+                 f"missing or not an object: {type(section).__name__}")]
+    problems: List[str] = []
+    for k in _MULTIDEVICE_NUMERIC_KEYS:
+        if not _num(section.get(k)):
+            problems.append(f"{k}: not a finite number")
+    for k in _MULTIDEVICE_BOOL_KEYS:
+        if not isinstance(section.get(k), bool):
+            problems.append(f"{k}: not a bool")
+    asn = section.get("assignment")
+    if not (isinstance(asn, dict)
+            and isinstance(asn.get("prefill"), str)
+            and isinstance(asn.get("decode"), str)):
+        problems.append("assignment: missing prefill/decode device labels")
+    link = section.get("measured_link_bw")
+    if link is not None and not (_num(link) and link > 0):
+        problems.append("measured_link_bw: neither null nor a positive "
+                        "number")
+    for leg in _MULTIDEVICE_SUMMARIES:
+        summ = section.get(leg)
+        if not isinstance(summ, dict):
+            problems.append(f"{leg}: missing summary")
+            continue
+        for k in ("tok_per_s", "tokens_out", "requests_done"):
+            if not _num(summ.get(k)):
+                problems.append(f"{leg}.{k}: not a finite number")
+    mig = section.get("migration")
+    if not isinstance(mig, dict):
+        problems.append("migration: missing")
+    else:
+        for k in _MIGRATION_NUMERIC_KEYS:
+            if not _num(mig.get(k)):
+                problems.append(f"migration.{k}: not a finite number")
+        for k in _MIGRATION_BOOL_KEYS:
+            if not isinstance(mig.get(k), bool):
+                problems.append(f"migration.{k}: not a bool")
+        if not isinstance(mig.get("decode_target"), str):
+            problems.append("migration.decode_target: not a string")
+    checks.append(("multidevice section schema", not problems,
+                   "; ".join(problems) if problems else
+                   f"{section.get('n_devices')} devices "
+                   f"({asn.get('prefill')} | {asn.get('decode')}), four "
+                   f"serving legs + migration well-formed"))
+    if problems:
+        return checks
+
+    checks.append((
+        "multidevice outputs bit-identical to colocated",
+        section["all_identical"],
+        ", ".join(f"{k}={section[k]}"
+                  for k in _MULTIDEVICE_BOOL_KEYS[1:4])
+        + f", migration={mig['bit_identical']}"))
+
+    distinct = section["distinct_devices"]
+    if distinct:
+        # a sync stall too small to measure cannot anchor a ratio — the
+        # overlap gate needs the blocking baseline to have actually paid
+        # a visible transfer cost
+        if section["sync_stall_s"] >= MULTIDEVICE_STALL_FLOOR_S:
+            checks.append((
+                "async hand-off hides the transfer stall",
+                section["stall_ratio"] <= MULTIDEVICE_STALL_CEILING,
+                f"async stall {section['async_stall_s']*1e3:.2f}ms vs sync "
+                f"{section['sync_stall_s']*1e3:.2f}ms "
+                f"(ratio {section['stall_ratio']:.2f}, ceiling "
+                f"{MULTIDEVICE_STALL_CEILING}; overlap "
+                f"{section['async_overlap_s']*1e3:.2f}ms)"))
+        else:
+            checks.append((
+                "async hand-off hides the transfer stall",
+                True,
+                f"sync stall {section['sync_stall_s']*1e3:.2f}ms below the "
+                f"{MULTIDEVICE_STALL_FLOOR_S*1e3:.0f}ms measurement floor; "
+                f"ratio not gated"))
+        floor = 1.0 - threshold
+        checks.append((
+            "distinct-device throughput holds the shared-device floor",
+            section["tok_per_s_ratio_vs_shared"] >= floor,
+            f"{section['tok_per_s_ratio_vs_shared']:.2f}x the same loop on "
+            f"one device (floor {floor:.2f}x; vs sync hand-off "
+            f"{section['tok_per_s_ratio_vs_sync']:.2f}x, vs colocated "
+            f"{section['tok_per_s_ratio_vs_colocated']:.2f}x)"))
+    else:
+        checks.append((
+            "multidevice ran on distinct devices",
+            True,
+            f"degraded to {section['n_devices']} visible device(s); "
+            f"overlap + throughput gates skipped "
+            f"(forced_subprocess={section['forced_subprocess']})"))
+
+    checks.append((
+        "mid-run migration preserves in-flight slots",
+        mig["requests_preserved"] and mig["n_live_migrations"] >= 1
+        and mig["bit_identical"],
+        f"{mig['n_done']}/{mig['n_requests']} done, "
+        f"{mig['n_dropped']} dropped, {mig['n_live_migrations']} live "
+        f"migrations, {mig['n_alerts']} alerts, decode -> "
+        f"{mig['decode_target']} engine"))
+    return checks
+
+
 # every request lifecycle stage a serve --trace file must cover: complete
 # ("X") spans and instant ("i") markers emitted by the obs tracer
 _TRACE_REQUIRED_SPANS = ("queued", "prefill", "decode", "burst", "sync")
@@ -586,6 +733,7 @@ def compare(baseline: dict, fresh: dict, *, threshold: float,
     checks.extend(validate_streaming(fresh))
     checks.extend(validate_observability(fresh))
     checks.extend(validate_adaptive(fresh))
+    checks.extend(validate_multidevice(fresh, threshold=threshold))
     return checks
 
 

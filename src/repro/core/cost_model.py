@@ -200,6 +200,10 @@ class TransferCost:
     link_bw: float
     t_transfer: float
     energy_j: float
+    # where link_bw came from: "assumed-mem-bw" (datasheet fallback),
+    # "provided" (caller passed one, e.g. the profiling runtime's measured
+    # inter-device copy rate), or "colocated" (same device, free)
+    link_source: str = "assumed-mem-bw"
 
 
 def transfer_cost(
@@ -212,18 +216,24 @@ def transfer_cost(
     """Price an engine-switch hand-off of ``n_bytes`` from ``src`` to ``dst``.
 
     Same device -> free (XLA's shared 'virtual memory space', plan.py).
-    ``link_bw`` overrides the derived bandwidth (e.g. a measured PCIe rate
-    from the profiling runtime).
+    ``link_bw`` overrides the derived bandwidth — pass the measured rate
+    from :func:`repro.profiling.transfer.measure_link_bandwidth` where one
+    exists; the no-argument fallback (slower endpoint's declared link or
+    memory bandwidth) is a datasheet *assumption*, and the result records
+    which of the two priced the hand-off in ``link_source``.
     """
     if src.name == dst.name:
         return TransferCost(src=src.name, dst=dst.name, bytes_moved=0,
-                            link_bw=float("inf"), t_transfer=0.0, energy_j=0.0)
+                            link_bw=float("inf"), t_transfer=0.0,
+                            energy_j=0.0, link_source="colocated")
+    source = "provided" if link_bw is not None else "assumed-mem-bw"
     if link_bw is None:
         link_bw = min(src.link_bw or src.mem_bw, dst.link_bw or dst.mem_bw)
     t = n_bytes / link_bw if link_bw > 0 else float("inf")
     return TransferCost(
         src=src.name, dst=dst.name, bytes_moved=n_bytes, link_bw=link_bw,
-        t_transfer=t, energy_j=t * (src.power_idle + dst.power_idle))
+        t_transfer=t, energy_j=t * (src.power_idle + dst.power_idle),
+        link_source=source)
 
 
 # ---------------------------------------------------------------------------

@@ -57,7 +57,7 @@ from ..obs.export import write_metrics, write_trace
 from ..serving import (DisaggregatedEngineLoop, EngineLoop, place_phases,
                        prefix_shared_workload, synthetic_workload)
 from ..serving import placement as placement_lib
-from .mesh import make_host_mesh, make_production_mesh
+from .mesh import device_assignment, make_host_mesh, make_production_mesh
 
 
 class Server:
@@ -186,6 +186,44 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--prefill-slots", type=int, default=None,
                     help="disaggregated path: prefill-engine slots "
                          "(default: --slots)")
+    ap.add_argument("--device-assignment", default="single",
+                    choices=["single", "auto"],
+                    help="disaggregated path: auto pins the prefill and "
+                         "decode engines onto distinct jax devices when "
+                         ">= 2 are visible (params + KV arenas live per "
+                         "phase, hand-offs become real inter-device "
+                         "copies; on CPU hosts set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N); "
+                         "single keeps everything on the default device")
+    ap.add_argument("--sync-handoff", action="store_true",
+                    help="disaggregated path: adopt each phase hand-off "
+                         "immediately after dispatch instead of letting "
+                         "the transfer overlap the prefill engine's next "
+                         "bursts (the synchronous baseline the async "
+                         "hand-off is measured against)")
+    ap.add_argument("--handoff-link-bw", type=float, default=None,
+                    metavar="BYTES_PER_S",
+                    help="disaggregated path: price phase hand-offs at "
+                         "this link bandwidth instead of the device "
+                         "models' datasheet fallback (wins over "
+                         "--measure-link-bw)")
+    ap.add_argument("--measure-link-bw", nargs="?", default=None,
+                    const=True, metavar="PATH",
+                    help="measure an actual inter-device jax.device_put "
+                         "of a representative page batch between the two "
+                         "phase devices at startup, record it in the "
+                         "profile cache (default path: the "
+                         "REPRO_PROFILE_CACHE cache) for "
+                         "place_phases(price=\"measured\"), and price "
+                         "this run's hand-offs with it")
+    ap.add_argument("--persist-curves", default=None, metavar="PATH",
+                    help="continuous path: prime admission pricing from "
+                         "the latency(batch) curve a previous run fed "
+                         "into this profile cache (source="
+                         "serving-telemetry), and flush this run's burst "
+                         "telemetry back on exit — a restarted server "
+                         "prices from the last run's curve instead of "
+                         "re-warming")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="continuous path: record per-request lifecycle "
                          "spans + engine burst/sync spans and write a "
@@ -216,7 +254,15 @@ def build_parser() -> argparse.ArgumentParser:
                          "throughput down by FACTOR (drift_scaled_device) "
                          "so the priced step time is FACTOR x too slow — "
                          "an injected mispricing the watchdog must detect "
-                         "and correct")
+                         "and correct (FACTOR < 1 prices too FAST, so the "
+                         "drifted device looks slow and placement moves "
+                         "work off it)")
+    ap.add_argument("--misprice-phase", default="both",
+                    choices=["both", "prefill", "decode"],
+                    help="--misprice scope on the disaggregated path: "
+                         "misprice only one phase's device model so "
+                         "exactly that stream drifts (the deterministic "
+                         "trigger for mid-run placement actuation)")
     ap.add_argument("--slo-report", action="store_true",
                     help="continuous path: print per-request-class "
                          "(short/medium/long by generation length) "
@@ -226,6 +272,36 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--slo-tpot-ms", type=float, default=200.0,
                     help="--slo-report: time-per-output-token objective (ms)")
     return ap
+
+
+def _prime_curves(args, cfg, kv_len: int, batcher) -> None:
+    """--persist-curves startup leg: fit the latency(batch) curve from the
+    telemetry a previous run fed into the cache and install it as the
+    decode batcher's pricing — a restarted server prices from the last
+    run's observed curve instead of re-warming through the watchdog."""
+    if not args.persist_curves:
+        return
+    import os
+
+    from ..obs.curves import curve_points_from_cache, fit_latency_curve
+    from ..profiling.cache import ProfileCache
+    if not os.path.exists(args.persist_curves):
+        print(f"[serve] curves: {args.persist_curves} does not exist yet "
+              f"(first run warms it)", flush=True)
+        return
+    cache = ProfileCache.load(args.persist_curves, strict=False)
+    points = curve_points_from_cache(cache, cfg, kv_len=kv_len)
+    curve = fit_latency_curve(points, source="cache-curve")
+    if curve is None:
+        print(f"[serve] curves: {args.persist_curves} holds "
+              f"{len(points)} usable batch point(s) — need >= 2 for a "
+              f"curve; pricing stays analytic", flush=True)
+        return
+    detail = batcher.reprice(curve.predict, source="cache-curve")
+    print(f"[serve] curves: primed {batcher.phase} pricing from "
+          f"{args.persist_curves} (batches {list(curve.batches)}, "
+          f"token budget {detail['token_budget_old']} -> "
+          f"{detail['token_budget']})", flush=True)
 
 
 def main() -> None:
@@ -245,6 +321,12 @@ def main() -> None:
                  "instrument the continuous engine; drop --static-batching")
     if args.misprice is not None and args.misprice <= 0:
         ap.error("--misprice must be > 0")
+    if args.static_batching and (args.device_assignment != "single"
+                                 or args.sync_handoff or args.persist_curves
+                                 or args.measure_link_bw):
+        ap.error("--device-assignment/--sync-handoff/--persist-curves/"
+                 "--measure-link-bw drive the continuous engine; drop "
+                 "--static-batching")
     if args.prefix_sharing and args.kv_layout == "dense":
         ap.error("--prefix-sharing maps physical KV pages; it requires "
                  "--kv-layout paged")
@@ -369,6 +451,37 @@ def main() -> None:
                   f"+{len(d.tokens)} [{toks}]{tag}", flush=True)
 
     step_slo_s = None if args.step_slo_ms is None else args.step_slo_ms / 1e3
+
+    # device topology: pin the two phase engines onto distinct devices
+    # (degrades gracefully to one device when only one is visible)
+    assignment = None
+    if args.device_assignment == "auto":
+        assignment = device_assignment()
+        print(f"[serve] device assignment: {assignment.summary()}",
+              flush=True)
+
+    # measured inter-device link bandwidth: an actual device_put of a
+    # representative page batch, persisted environment-keyed in the
+    # profile cache so place_phases(price="measured") prices hand-offs
+    # from it on later runs too
+    measured_link_bw = None
+    if args.measure_link_bw:
+        from ..profiling import record_link_bw
+        from ..profiling.cache import DEFAULT_CACHE_PATH, ProfileCache
+        link_cache_path = (DEFAULT_CACHE_PATH
+                           if args.measure_link_bw is True
+                           else args.measure_link_bw)
+        devs = assignment if assignment is not None else device_assignment()
+        link_cache = ProfileCache.load(link_cache_path, strict=False)
+        m = record_link_bw(link_cache, devs.prefill, devs.decode)
+        link_cache.save(link_cache_path)
+        measured_link_bw = m["link_bw"]
+        print(f"[serve] link {m['src']} -> {m['dst']}: "
+              f"{measured_link_bw / 1e9:.2f} GB/s "
+              f"({m['n_bytes']} bytes in {m['t_median'] * 1e3:.3f} ms) "
+              f"-> {link_cache_path}", flush=True)
+    handoff_link_bw = (args.handoff_link_bw if args.handoff_link_bw
+                       is not None else measured_link_bw)
     # one observability bundle for whichever loop runs: tracing only when
     # asked (NullTracer otherwise — near-zero cost), registry always (it
     # backs the hand-off ledger and the metrics dump), feedback only with
@@ -381,12 +494,17 @@ def main() -> None:
     obs = Observability(
         tracer=Tracer() if args.trace else None,
         feedback=(TelemetryFeedback(cfg, kv_len=max_len)
-                  if args.feed_cache else None),
+                  if args.feed_cache or args.persist_curves else None),
         watchdog=watchdog)
 
-    def _misprice(dev):
-        """Inject an admission-pricing error for watchdog CI/debug runs."""
+    def _misprice(dev, phase=None):
+        """Inject an admission-pricing error for watchdog CI/debug runs.
+        ``--misprice-phase`` scopes it to one phase's device model so
+        exactly that stream drifts (the placement-actuation trigger)."""
         if args.misprice is None:
+            return dev
+        if (phase is not None and args.misprice_phase != "both"
+                and args.misprice_phase != phase):
             return dev
         from ..core import device_models
         from ..serving.placement import drift_scaled_device
@@ -435,10 +553,16 @@ def main() -> None:
             kv_layout=args.kv_layout,
             decode_total_blocks=args.total_blocks,
             prefix_sharing=args.prefix_sharing,
-            prefill_device=_misprice(_phase_device(pre_eng)),
-            decode_device=_misprice(_phase_device(dec_eng)),
+            prefill_device=_misprice(_phase_device(pre_eng), "prefill"),
+            decode_device=_misprice(_phase_device(dec_eng), "decode"),
             step_slo_s=step_slo_s, obs=obs,
-            placement_engine_name=dec_eng.name)
+            handoff_link_bw=handoff_link_bw,
+            assignment=assignment,
+            async_handoff=not args.sync_handoff,
+            placement_engine_name=dec_eng.name,
+            prefill_placement_engine_name=pre_eng.name,
+            decode_placement_engine_name=dec_eng.name)
+        _prime_curves(args, cfg, max_len, engine.decode_batcher)
         with mesh:
             metrics = engine.run(requests, on_delta=on_delta)
         for b in engine.batchers:
@@ -450,6 +574,9 @@ def main() -> None:
         for k, v in engine.handoff.stats().items():
             val = f"{v:.4f}" if isinstance(v, float) else str(v)
             print(f"[serve] handoff.{k:>17}: {val}", flush=True)
+        print(f"[serve] decode target: {engine.decode_target} engine "
+              f"({'async' if not args.sync_handoff else 'sync'} hand-off)",
+              flush=True)
     else:
         if pre_eng is not None:          # colocated by choice of placement
             device_model = _phase_device(pre_eng)
@@ -460,6 +587,7 @@ def main() -> None:
             device_name=args.device_model,
             device_model=_misprice(device_model),
             step_slo_s=step_slo_s, obs=obs)
+        _prime_curves(args, cfg, max_len, engine.batcher)
         with mesh:
             metrics = engine.run(requests, on_delta=on_delta)
         print(f"[serve] token budget {engine.batcher.token_budget}/"
@@ -537,6 +665,16 @@ def main() -> None:
         print(f"[serve] fed {n} telemetry measurements from "
               f"{obs.feedback.n_bursts} bursts (batch sizes "
               f"{obs.feedback.batches}) -> {cache_path}", flush=True)
+    if args.persist_curves:
+        # --persist-curves exit leg: flush this run's burst telemetry so
+        # the next serve's _prime_curves finds a fresh curve
+        from ..profiling.cache import ProfileCache
+        cache = ProfileCache.load(args.persist_curves, strict=False)
+        n = obs.feedback.flush(cache)
+        cache.save(args.persist_curves)
+        print(f"[serve] curves: persisted {n} telemetry measurements "
+              f"(batch sizes {obs.feedback.batches}) -> "
+              f"{args.persist_curves}", flush=True)
 
 
 if __name__ == "__main__":

@@ -23,11 +23,15 @@ from .calibrate import (CalibratedDeviceModel, CalibrationReport,
                         LayerPrediction, analytic_predicted_time,
                         calibrate_engine, calibration_report, fit_kind_rates)
 from .pricer import MeasuredPricer
+from .transfer import (LINK_ENGINE, LINK_SOURCE, cached_link_bw,
+                       measure_link_bandwidth, record_link_bw)
 
 __all__ = [
     "CalibratedDeviceModel", "CalibrationReport", "DEFAULT_CACHE_PATH",
-    "LayerPrediction", "Measurement", "MeasuredPricer", "ProfileCache",
-    "analytic_predicted_time", "calibrate_engine", "calibration_report",
+    "LINK_ENGINE", "LINK_SOURCE", "LayerPrediction", "Measurement",
+    "MeasuredPricer", "ProfileCache", "analytic_predicted_time",
+    "cached_link_bw", "calibrate_engine", "calibration_report",
     "entry_key", "environment", "fingerprint", "fit_kind_rates",
-    "make_input", "profile_network", "time_layer", "validate_dict",
+    "make_input", "measure_link_bandwidth", "profile_network",
+    "record_link_bw", "time_layer", "validate_dict",
 ]

@@ -1,0 +1,132 @@
+"""Measured inter-device link bandwidth for hand-off pricing.
+
+``core.cost_model.transfer_cost`` historically *assumed* the hand-off
+link: absent an explicit ``link_bw`` it bounds the transfer by the
+slower endpoint's memory bandwidth — a device-datasheet number, not a
+measurement, and on real hosts the device-to-device path (PCIe, ICI,
+or a plain host memcpy between CPU logical devices) is nothing like
+HBM bandwidth.  This module closes that gap the same way PR 2 closed
+the compute one: **measure** an actual ``jax.device_put`` of a
+representative page batch between the two phase devices, and persist
+the result in the PR 2 profile cache (environment-keyed, so a cache
+written under one jax/backend never prices another).
+
+The cache entry is a full :data:`~repro.profiling.cache.REQUIRED_FIELDS`
+measurement (``kind="transfer"``, ``t_*`` = seconds for the timed copy,
+``flops=0``) plus the derived ``link_bw`` (bytes/s) and the endpoint
+labels — so ``python -m repro.profiling.cache --validate`` accepts it
+and :func:`cached_link_bw` can find it again next run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import cache as cache_lib
+
+# engine name the link measurements are filed under in the profile cache
+LINK_ENGINE = "interconnect"
+# provenance tag (ProfileCache.measurements(source=...))
+LINK_SOURCE = "link-calibration"
+
+# default representative payload: 64 KV pages of a smallish model — big
+# enough to amortize dispatch overhead, small enough to measure at startup
+DEFAULT_LINK_PROBE_BYTES = 1 << 22          # 4 MiB
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """Declarative spec of one measured device-to-device copy (a
+    dataclass so :func:`repro.profiling.cache.fingerprint` can hash it
+    like any layer spec)."""
+    name: str
+    src: str                     # device label, e.g. "cpu:0"
+    dst: str
+    n_bytes: int
+
+
+def measure_link_bandwidth(src_dev, dst_dev, *, n_bytes: int =
+                           DEFAULT_LINK_PROBE_BYTES, warmup: int = 1,
+                           repeats: int = 5) -> dict:
+    """Time ``jax.device_put`` of an ``n_bytes`` buffer from ``src_dev``
+    to ``dst_dev`` and return a profile-cache measurement dict.
+
+    Discipline matches the PR 2 bench harness: the source buffer is
+    committed (and synced) to ``src_dev`` before timing, every timed
+    copy is individually ``block_until_ready``'d, and the repeats reduce
+    to median + IQR.  Same-device "copies" are measured too — they give
+    the honest (near-zero) price of a colocated hand-off.
+    """
+    from ..launch.mesh import device_label
+
+    n_f32 = max(1, n_bytes // 4)
+    src_label = device_label(src_dev)
+    dst_label = device_label(dst_dev)
+    x = jax.device_put(jnp.zeros((n_f32,), jnp.float32), src_dev)
+    x.block_until_ready()
+    for _ in range(max(0, warmup)):
+        jax.device_put(x, dst_dev).block_until_ready()
+    times = []
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        jax.device_put(x, dst_dev).block_until_ready()
+        times.append(time.perf_counter() - t0)
+    arr = np.asarray(times)
+    t_median = float(np.median(arr))
+    q1, q3 = np.percentile(arr, [25, 75])
+    spec = LinkSpec(name=f"link:{src_label}->{dst_label}",
+                    src=src_label, dst=dst_label, n_bytes=4 * n_f32)
+    env = cache_lib.environment()
+    return {
+        "layer": spec.name, "kind": "transfer", "engine": LINK_ENGINE,
+        "batch": 1, "dtype": "float32", "repeats": int(repeats),
+        "t_median": t_median, "t_iqr": float(q3 - q1),
+        "t_min": float(arr.min()), "t_mean": float(arr.mean()),
+        "flops": 0,
+        "fingerprint": cache_lib.fingerprint(spec, 1, "float32"),
+        "jax_version": env["jax_version"], "backend": env["backend"],
+        # derived + provenance (extra fields survive cache validation)
+        "link_bw": (4 * n_f32) / t_median if t_median > 0 else float("inf"),
+        "n_bytes": 4 * n_f32, "src": src_label, "dst": dst_label,
+        "source": LINK_SOURCE,
+    }
+
+
+def record_link_bw(cache: cache_lib.ProfileCache, src_dev, dst_dev, *,
+                   n_bytes: int = DEFAULT_LINK_PROBE_BYTES,
+                   repeats: int = 5) -> dict:
+    """Measure the ``src -> dst`` link and store it in ``cache`` (not
+    saved to disk here — the caller owns persistence)."""
+    m = measure_link_bandwidth(src_dev, dst_dev, n_bytes=n_bytes,
+                               repeats=repeats)
+    cache.put(m)
+    return m
+
+
+def cached_link_bw(cache: cache_lib.ProfileCache, *,
+                   src: Optional[str] = None,
+                   dst: Optional[str] = None) -> Optional[float]:
+    """The measured link bandwidth (bytes/s) for this environment, or
+    None when the cache holds no usable link measurement.
+
+    ``src``/``dst`` filter on device labels; without them the
+    largest-payload measurement wins (the most amortized probe is the
+    best steady-state estimate).
+    """
+    best = None
+    for m in cache.measurements(engine=LINK_ENGINE, source=LINK_SOURCE):
+        if src is not None and m.get("src") != src:
+            continue
+        if dst is not None and m.get("dst") != dst:
+            continue
+        bw = m.get("link_bw")
+        if not isinstance(bw, (int, float)) or bw <= 0:
+            continue
+        if best is None or m.get("n_bytes", 0) > best.get("n_bytes", 0):
+            best = m
+    return float(best["link_bw"]) if best else None

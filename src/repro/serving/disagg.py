@@ -15,12 +15,37 @@ default) the migrated snapshot is block-granular — only the pages holding
 the prefilled tokens ship, not the slot's full ``max_seq`` reservation —
 so the metered hand-off bytes scale with the prompt.
 
+With a :class:`~repro.launch.mesh.DeviceAssignment` the two phase engines
+are *physically* split: each engine's params, KV arenas and slot buffers
+are committed to its assigned device, and the hand-off becomes an actual
+inter-device copy.  That copy is **asynchronous and double-buffered**:
+the prefill side exports the snapshot, dispatches ``jax.device_put``
+toward the decode device (which returns immediately) and goes straight
+back to bursting its next prompts, while the decode side adopts the slot
+once the transfer resolves — at most :data:`MAX_PENDING_HANDOFFS`
+transfers ride in flight.  The :class:`HandoffLedger` meters both sides
+of the overlap: ``stall_s`` is the time adoption actually blocked on an
+unresolved transfer, ``overlap_s`` the dispatch-to-adoption window the
+copy had to hide in.  Setting ``async_handoff=False`` adopts immediately
+after dispatch — the synchronous baseline whose stall is the full
+transfer, which the multidevice benchmark compares against.
+
 Each phase owns its own KV pool and its own :class:`ContinuousBatcher`,
 so admission and migration are budgeted per (phase, engine) pair: queued
 requests enter prefill against the prefill engine's token budget; prefill-
 complete requests migrate only when the decode engine's budget and pool
 admit them (until then they hold their prefill slot — natural back-
 pressure on admission).
+
+The PR 7 watchdog's placement advice can also **actuate** here: when the
+two phases price on distinct DSE engines, a drift alert re-runs
+``place_phases`` with the drifted device de-rated, and if the fresh
+decision moves the decode phase onto the *other* hosted engine the loop
+switches its decode target mid-run — in-flight decode slots live-migrate
+through the same export/import machinery (capacity-permitting; the rest
+finish where they are), and later phase boundaries flip in place instead
+of handing off.  All of it is scheduling: per-request greedy outputs are
+engine- and schedule-independent.
 
 Per-request outputs are bit-identical to the colocated
 :class:`~repro.serving.engine_loop.EngineLoop` (and therefore to the
@@ -29,19 +54,26 @@ is engine-independent.  ``tests/test_placement.py`` asserts it.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Dict, List, Optional
 
 from ..core import device_models
 from ..core.cost_model import transfer_cost
+from ..launch.mesh import DeviceAssignment
 from ..models import transformer as T
 from ..obs import MetricsRegistry, Observability, default_clock
 from .batcher import ContinuousBatcher
 from .driver import (OpenLoopDriver, ServeMetrics, StreamDelta, TokenSink,
                      burst_size, sample_pools)
-from .engine_loop import (SlotEngine, trace_admission, trace_completion,
+from .engine_loop import (SlotEngine, snapshot_ready, snapshot_wait,
+                          state_to_device, trace_admission, trace_completion,
                           trace_phase_flip, wire_pool_events)
 from .kv_pool import KVPool
 from .request import Request, RequestState
+
+# double-buffering bound: at most this many dispatched-but-unadopted
+# hand-offs ride in flight before the next dispatch blocks on the oldest
+MAX_PENDING_HANDOFFS = 2
 
 
 class HandoffLedger:
@@ -52,7 +84,16 @@ class HandoffLedger:
     (``n_handoffs``, ``bytes_moved``, ``modeled_s``, ``modeled_energy_j``,
     ``stats()``) while the values themselves live in the same registry
     snapshot/time-series stream as KV occupancy and queue depth instead of
-    a parallel ad-hoc ledger."""
+    a parallel ad-hoc ledger.
+
+    The async hand-off adds the overlap accounting: ``stall_s`` sums the
+    time adoptions actually blocked waiting on an in-flight transfer,
+    ``overlap_s`` the dispatch-to-adoption windows the transfers had to
+    hide in (synchronous hand-offs stall for the whole copy and overlap
+    ~nothing — the measured baseline).  ``n_live_migrations`` counts
+    hand-offs that moved an *in-flight decode* slot between engines (the
+    watchdog's placement actuation) rather than a phase boundary.
+    """
 
     def __init__(self, registry: Optional[MetricsRegistry] = None):
         if registry is None:
@@ -61,13 +102,22 @@ class HandoffLedger:
         self._bytes = registry.counter("handoff_bytes")
         self._modeled_s = registry.counter("handoff_modeled_s")
         self._energy_j = registry.counter("handoff_modeled_energy_j")
+        self._stall_s = registry.counter("handoff_stall_s")
+        self._overlap_s = registry.counter("handoff_overlap_s")
+        self._live = registry.counter("handoff_live_migrations")
 
-    def record(self, n_bytes: int, price) -> None:
-        """Account one hand-off: metered bytes + its transfer-cost price."""
+    def record(self, n_bytes: int, price, *, stall_s: float = 0.0,
+               overlap_s: float = 0.0, live: bool = False) -> None:
+        """Account one hand-off: metered bytes + its transfer-cost price,
+        plus the measured stall/overlap split of the actual copy."""
         self._n.inc()
         self._bytes.inc(n_bytes)
         self._modeled_s.inc(price.t_transfer)
         self._energy_j.inc(price.energy_j)
+        self._stall_s.inc(max(stall_s, 0.0))
+        self._overlap_s.inc(max(overlap_s, 0.0))
+        if live:
+            self._live.inc()
 
     @property
     def n_handoffs(self) -> int:
@@ -85,13 +135,44 @@ class HandoffLedger:
     def modeled_energy_j(self) -> float:
         return self._energy_j.value
 
+    @property
+    def stall_s(self) -> float:
+        return self._stall_s.value
+
+    @property
+    def overlap_s(self) -> float:
+        return self._overlap_s.value
+
+    @property
+    def n_live_migrations(self) -> int:
+        return int(self._live.value)
+
     def stats(self) -> Dict[str, float]:
         return {
             "n_handoffs": self.n_handoffs,
             "bytes_moved": self.bytes_moved,
             "modeled_s": self.modeled_s,
             "modeled_energy_j": self.modeled_energy_j,
+            "stall_s": self.stall_s,
+            "overlap_s": self.overlap_s,
+            "n_live_migrations": self.n_live_migrations,
         }
+
+
+@dataclasses.dataclass
+class _PendingHandoff:
+    """One dispatched-but-unadopted phase hand-off: the snapshot is (or
+    may still be) in flight toward the decode device; the decode pool
+    lease already exists (``req.slot``), the prefill slot is released."""
+
+    req: Request
+    state: Dict
+    written: int                 # src-lease written tokens at export
+    dst_written0: int            # dst-lease pre-adoption (shared) tokens
+    skip_blocks: int             # prefix-shared leading pages, not landed
+    steps_total: int             # decode steps the adopting engine owes
+    t_dispatch: float            # tracer-clock stamp at dispatch
+    span: Optional[object]       # open "handoff" tracer span
 
 
 class DisaggregatedEngineLoop:
@@ -116,6 +197,10 @@ class DisaggregatedEngineLoop:
                  step_slo_s: Optional[float] = None,
                  handoff_link_bw: Optional[float] = None,
                  placement_engine_name: str = "xla",
+                 prefill_placement_engine_name: Optional[str] = None,
+                 decode_placement_engine_name: Optional[str] = None,
+                 assignment: Optional[DeviceAssignment] = None,
+                 async_handoff: bool = True,
                  prefix_sharing: bool = False,
                  obs: Optional[Observability] = None):
         if prefix_sharing:
@@ -130,6 +215,7 @@ class DisaggregatedEngineLoop:
         self.cfg = cfg
         self.kv_layout = kv_layout
         self.prefix_sharing = prefix_sharing
+        self.assignment = assignment
         self.obs = obs if obs is not None else Observability()
         # each phase pool runs its own prefix index: the prefill index
         # serves admission (prefill skipping), the decode index dedupes
@@ -140,10 +226,12 @@ class DisaggregatedEngineLoop:
         decode_pool = KVPool(n_decode_slots, max_seq, block_size=block_size,
                              total_blocks=decode_total_blocks,
                              prefix_sharing=prefix_sharing)
-        self.prefill = SlotEngine(cfg, params, prefill_pool,
-                                  kv_layout=kv_layout, name="prefill")
-        self.decode = SlotEngine(cfg, params, decode_pool,
-                                 kv_layout=kv_layout, name="decode")
+        self.prefill = SlotEngine(
+            cfg, params, prefill_pool, kv_layout=kv_layout, name="prefill",
+            device=None if assignment is None else assignment.prefill)
+        self.decode = SlotEngine(
+            cfg, params, decode_pool, kv_layout=kv_layout, name="decode",
+            device=None if assignment is None else assignment.decode)
         wire_pool_events(prefill_pool, self.obs.tracer)
         wire_pool_events(decode_pool, self.obs.tracer)
         self.prefill_batcher = ContinuousBatcher(
@@ -159,12 +247,28 @@ class DisaggregatedEngineLoop:
         self._decode_dev = (decode_device
                             or device_models.get(decode_device_name))
         self._handoff_link_bw = handoff_link_bw
-        # the DSE candidate the in-process SlotEngines actually execute on;
-        # the watchdog's mid-run placement re-run de-rates this engine
+        # the DSE candidates the in-process SlotEngines actually execute
+        # on; the watchdog's mid-run placement re-run de-rates the drifted
+        # phase's engine.  With one shared name the decision stays advice;
+        # with distinct per-phase names it ACTUATES (_actuate_placement)
         self._placement_engine_name = placement_engine_name
+        self._prefill_placement_name = (prefill_placement_engine_name
+                                        or placement_engine_name)
+        self._decode_placement_name = (decode_placement_engine_name
+                                       or placement_engine_name)
+        self._async_handoff = async_handoff
+        # which hosted engine currently serves the decode phase: "decode"
+        # (hand-off at the boundary) or "prefill" (flip in place) — the
+        # watchdog's placement actuation switches this mid-run
+        self._decode_target = "decode"
         self.handoff = HandoffLedger(registry=self.obs.registry)
         # prefill-complete requests awaiting migration (reset per run)
         self._ready: List[Request] = []
+        # dispatched hand-offs whose transfer may still be in flight
+        self._pending: List[_PendingHandoff] = []
+        # rid -> n_fed at live-migration export: steps_done restarts at 0
+        # on the adopting engine, so fed accounting resumes from this base
+        self._fed_base: Dict[int, int] = {}
 
     def warmup(self) -> None:
         self.prefill.warmup()
@@ -176,20 +280,39 @@ class DisaggregatedEngineLoop:
 
     @property
     def n_active(self) -> int:
-        """Slots bound across both phase engines (parked ready slots
-        included) — uniform with the colocated loop's ``n_active``."""
-        return self.prefill.n_active + self.decode.n_active
+        """Slots bound across both phase engines (parked ready slots and
+        in-flight hand-offs included) — uniform with the colocated loop's
+        ``n_active``."""
+        return (self.prefill.n_active + self.decode.n_active
+                + len(self._pending))
+
+    @property
+    def decode_target(self) -> str:
+        """Which hosted engine currently serves the decode phase."""
+        return self._decode_target
 
     # ---- migration -------------------------------------------------------
-    def _migrate(self, req: Request) -> bool:
-        """Move a prefill-complete request onto the decode engine.  Returns
-        False (leaving the request parked in its prefill slot) when the
-        decode engine's token budget or pool cannot take it yet."""
-        if self.decode.n_active >= self.decode_batcher.token_budget:
+    def _dispatch_handoff(self, req: Request) -> bool:
+        """Start moving a prefill-complete request onto the decode engine.
+        Returns False (leaving the request parked in its prefill slot) when
+        the decode engine's token budget or pool cannot take it yet.
+
+        This is the *dispatch* half of the hand-off: export the snapshot,
+        start the ``device_put`` toward the decode device (returns
+        immediately) and release the prefill slot — the prefill engine goes
+        straight back to bursting.  Adoption happens in :meth:`_adopt` once
+        the transfer resolves (or immediately, when ``async_handoff`` is
+        off).  At most :data:`MAX_PENDING_HANDOFFS` dispatched transfers
+        ride in flight; past that the oldest is adopted first (blocking) —
+        the double-buffering bound."""
+        if (self.decode.n_active + len(self._pending)
+                >= self.decode_batcher.token_budget):
             return False
         prompt = req.prompt if self.decode.pool.prefix_sharing else None
         if not self.decode.pool.can_admit(req.total_tokens, prompt):
             return False
+        while len(self._pending) >= MAX_PENDING_HANDOFFS:
+            self._adopt(self._pending.pop(0))
         tracer = self.obs.tracer
         h = (tracer.begin("handoff", track="requests", tid=req.rid,
                           cat="request")
@@ -208,27 +331,135 @@ class DisaggregatedEngineLoop:
         dst_lease = self.decode.pool.lease(req.rid)
         skip = dst_lease.shared_tokens // self.decode.pool.block_size
         self.decode.pool.consume_cow(req.rid)
+        if self.decode.device is not None:
+            # async dispatch: device_put returns immediately; the copy
+            # drains toward the decode device while prefill keeps bursting
+            state = state_to_device(state, self.decode.device)
         # the prefill engine already produced the first sample; the decode
         # engine owes the remaining gen - 1 steps
-        self.decode.adopt(req, state, steps_total=req.max_new_tokens - 1,
-                          skip_blocks=skip)
+        self._pending.append(_PendingHandoff(
+            req=req, state=state, written=written,
+            dst_written0=dst_lease.written_tokens, skip_blocks=skip,
+            steps_total=req.max_new_tokens - 1,
+            t_dispatch=tracer.now(), span=h))
+        if not self._async_handoff:
+            self._adopt(self._pending.pop())
+        return True
+
+    def _adopt(self, ph: _PendingHandoff) -> None:
+        """Adoption half of the hand-off: wait out whatever part of the
+        transfer is still in flight (the measured *stall*), install the
+        snapshot into the decode slot and account the hand-off."""
+        tracer = self.obs.tracer
+        t0 = tracer.now()
+        snapshot_wait(ph.state)
+        stall = tracer.now() - t0
+        # the window the copy had to hide in: dispatch -> adoption start
+        overlap = max(t0 - ph.t_dispatch, 0.0)
+        req = ph.req
+        self.decode.adopt(req, ph.state, steps_total=ph.steps_total,
+                          skip_blocks=ph.skip_blocks)
         # carry the KV-write accounting into the decode pool's ledger
         # (the lease already counts its shared tokens as written)
         self.decode.pool.note_write(
-            req.rid,
-            min(written, req.total_tokens) - dst_lease.written_tokens)
+            req.rid, min(ph.written, req.total_tokens) - ph.dst_written0)
         req.state = RequestState.DECODE
         self.decode_batcher.n_admitted += 1      # migration ledger
-
-        n_bytes = SlotEngine.state_nbytes(state)
+        n_bytes = SlotEngine.state_nbytes(ph.state)
         price = transfer_cost(n_bytes, self._prefill_dev, self._decode_dev,
                               link_bw=self._handoff_link_bw)
-        self.handoff.record(n_bytes, price)
-        if h is not None:
-            tracer.end(h, args={"bytes": n_bytes,
-                                "modeled_s": price.t_transfer,
-                                "modeled_energy_j": price.energy_j})
-        return True
+        self.handoff.record(n_bytes, price, stall_s=stall, overlap_s=overlap)
+        if ph.span is not None:
+            tracer.end(ph.span, args={"bytes": n_bytes,
+                                      "modeled_s": price.t_transfer,
+                                      "modeled_energy_j": price.energy_j,
+                                      "stall_s": stall,
+                                      "overlap_s": overlap,
+                                      "async": self._async_handoff})
+
+    def _drain_handoffs(self, *, force_all: bool = False) -> None:
+        """Adopt dispatched hand-offs, oldest first: every one whose
+        transfer has resolved, plus (blocking) while the pipeline is over
+        the double-buffer bound, the decode engine sits idle, or the
+        caller forces a full drain."""
+        while self._pending:
+            must = (force_all or len(self._pending) > MAX_PENDING_HANDOFFS
+                    or self.decode.n_active == 0)
+            if not must and not snapshot_ready(self._pending[0].state):
+                break
+            self._adopt(self._pending.pop(0))
+
+    def _live_migrate(self, target: str) -> int:
+        """Move in-flight DECODE slots onto the ``target`` engine through
+        the same export/import machinery the phase boundary uses —
+        synchronously, so the request resumes immediately.  Slots the
+        destination cannot take (budget/pool) finish where they are.
+        Returns the number of slots moved."""
+        src = self.decode if target == "prefill" else self.prefill
+        dst = self.prefill if target == "prefill" else self.decode
+        dst_batcher = (self.prefill_batcher if target == "prefill"
+                       else self.decode_batcher)
+        src_dev = (self._decode_dev if target == "prefill"
+                   else self._prefill_dev)
+        dst_dev = (self._prefill_dev if target == "prefill"
+                   else self._decode_dev)
+        skip_rids = ({r.rid for r in self._ready}
+                     | {ph.req.rid for ph in self._pending})
+        tracer = self.obs.tracer
+        moved = 0
+        for s, req in enumerate(list(src.slots)):
+            if (req is None or req.state is not RequestState.DECODE
+                    or req.rid in skip_rids):
+                continue
+            remaining = int(src.steps_total[s] - src.steps_done[s])
+            if remaining <= 0:
+                continue                 # completes where it is
+            if dst.n_active >= dst_batcher.token_budget:
+                continue                 # budget-limited: finish in place
+            prompt = req.prompt if dst.pool.prefix_sharing else None
+            if not dst.pool.can_admit(req.total_tokens, prompt):
+                continue                 # pool-limited: finish in place
+            h = (tracer.begin("handoff", track="requests", tid=req.rid,
+                              cat="request")
+                 if tracer.enabled else None)
+            # fed accounting resumes from the steps already run here
+            base = self._fed_base.get(req.rid)
+            if src is self.decode:
+                fed_base = ((req.prompt_len if base is None else base)
+                            + int(src.steps_done[s]))
+            else:
+                fed_base = ((req.shared_tokens if base is None else base)
+                            + int(src.steps_done[s]))
+            state = src.export_slot(s)
+            written = src.pool.lease(req.rid).written_tokens
+            src.release(req)
+            req.slot = dst.pool.alloc(req.rid, req.total_tokens,
+                                      prompt=prompt)
+            dst_lease = dst.pool.lease(req.rid)
+            skip = dst_lease.shared_tokens // dst.pool.block_size
+            dst.pool.consume_cow(req.rid)
+            if dst.device is not None:
+                state = state_to_device(state, dst.device)
+            t0 = tracer.now()
+            snapshot_wait(state)
+            stall = tracer.now() - t0
+            dst.adopt(req, state, steps_total=remaining, skip_blocks=skip)
+            dst.pool.note_write(
+                req.rid,
+                min(written, req.total_tokens) - dst_lease.written_tokens)
+            self._fed_base[req.rid] = fed_base
+            n_bytes = SlotEngine.state_nbytes(state)
+            price = transfer_cost(n_bytes, src_dev, dst_dev,
+                                  link_bw=self._handoff_link_bw)
+            self.handoff.record(n_bytes, price, stall_s=stall, live=True)
+            moved += 1
+            if h is not None:
+                tracer.end(h, args={"bytes": n_bytes,
+                                    "modeled_s": price.t_transfer,
+                                    "kind": "live-migration",
+                                    "from": src.name, "to": dst.name,
+                                    "remaining_steps": remaining})
+        return moved
 
     # ---- main loop -------------------------------------------------------
     def run(self, requests: List[Request], *,
@@ -246,9 +477,11 @@ class DisaggregatedEngineLoop:
     # ---- OpenLoopDriver hooks --------------------------------------------
     def start_run(self) -> None:
         self._ready = []
+        self._pending = []
+        self._fed_base = {}
 
     def in_flight(self) -> bool:
-        return bool(self._ready or self.prefill.n_active
+        return bool(self._ready or self._pending or self.prefill.n_active
                     or self.decode.n_active)
 
     def runnable(self) -> bool:
@@ -257,7 +490,7 @@ class DisaggregatedEngineLoop:
     def backlogged(self, queue: List[Request]) -> bool:
         # bursts stay short while hand-offs or queued arrivals wait so
         # migration latency is bounded
-        return bool(queue or self._ready)
+        return bool(queue or self._ready or self._pending)
 
     def admit(self, queue: List[Request], now: float,
               metrics: ServeMetrics) -> None:
@@ -280,8 +513,19 @@ class DisaggregatedEngineLoop:
                 continue
             i += 1
 
-        # migrate phase-boundary requests (decode budget + pool gated)
-        self._ready = [req for req in self._ready if not self._migrate(req)]
+        # adopt resolved in-flight hand-offs before dispatching new ones
+        self._drain_handoffs()
+
+        # migrate phase-boundary requests (decode budget + pool gated) —
+        # or, when placement actuation moved the decode phase onto the
+        # prefill engine, resume them in place (colocated step math)
+        if self._decode_target == "prefill":
+            for req in self._ready:
+                self.prefill.steps_total[req.slot] += req.max_new_tokens - 1
+            self._ready = []
+        else:
+            self._ready = [req for req in self._ready
+                           if not self._dispatch_handoff(req)]
 
         # admit new arrivals into the prefill engine; ready requests
         # still hold prefill slots, so n_active covers them
@@ -350,11 +594,13 @@ class DisaggregatedEngineLoop:
         admission AND re-run the placement DSE with that phase's device
         de-rated by the observed divergence.
 
-        Both phase SlotEngines live in one process, so the fresh
+        When both phases price on one DSE engine the fresh
         :func:`~repro.serving.placement.place_phases` decision is recorded
-        as *advice* (trace ``reprice`` args + the watchdog report) rather
-        than a hot engine swap; what actually changes mid-run is the
-        batcher's pricing and token budget.
+        as *advice* (trace ``reprice`` args + the watchdog report); with
+        distinct per-phase engine names the decision ACTUATES — if it
+        moves the decode phase onto the other hosted engine, the loop
+        switches its decode target and live-migrates in-flight slots
+        (:meth:`_live_migrate`).
         """
         batcher = {"prefill": self.prefill_batcher,
                    "decode": self.decode_batcher}.get(alert.phase)
@@ -370,29 +616,84 @@ class DisaggregatedEngineLoop:
 
     def _replace_placement(self, alert) -> Dict:
         """Re-run ``place_phases`` with the drifted device de-rated by the
-        observed ratio; returns JSON-safe advice for the re-price event."""
+        observed ratio; returns JSON-safe advice for the re-price event
+        (plus what, if anything, was actuated)."""
         from .placement import drift_scaled_device, place_phases
-        dev = (self._prefill_dev if alert.phase == "prefill"
+        drifted_phase = ("prefill" if alert.phase == "prefill" else "decode")
+        name = (self._prefill_placement_name if drifted_phase == "prefill"
+                else self._decode_placement_name)
+        dev = (self._prefill_dev if drifted_phase == "prefill"
                else self._decode_dev)
         try:
             scaled = drift_scaled_device(dev, alert.ewma_ratio)
+            # both hosted engines enter the DSE on their actual device
+            # models, the drifted one de-rated
+            overrides = {self._prefill_placement_name: self._prefill_dev,
+                         self._decode_placement_name: self._decode_dev}
+            overrides[name] = scaled
+            # with distinct per-phase engines the decision is meant to
+            # actuate, so the DSE is restricted to the hosted pair — a
+            # third engine we cannot run on would turn every decision
+            # into unactionable advice
+            engines = None
+            if (self._prefill_placement_name
+                    != self._decode_placement_name):
+                from ..core.engines import ENGINES_BY_NAME
+                hosted = [ENGINES_BY_NAME[n]
+                          for n in (self._prefill_placement_name,
+                                    self._decode_placement_name)
+                          if n in ENGINES_BY_NAME]
+                engines = hosted if len(hosted) == 2 else None
             pool = self.decode.pool
             prompt_len = max(pool.max_seq // 2, 1)
             decision = place_phases(
-                self.cfg, objective="latency", prompt_len=prompt_len,
+                self.cfg, engines, objective="latency",
+                prompt_len=prompt_len,
                 gen_len=max(pool.max_seq - prompt_len, 1),
                 batch=pool.n_slots, link_bw=self._handoff_link_bw,
-                device_overrides={self._placement_engine_name: scaled})
-            return {"placement_advice": {
-                        "prefill_engine": decision.prefill_engine,
-                        "decode_engine": decision.decode_engine,
-                        "colocated": decision.colocated,
-                        "objective": decision.objective,
-                        "value": float(decision.best.value)},
-                    "drifted_device": scaled.name}
+                device_overrides=overrides)
+            advice = {"placement_advice": {
+                          "prefill_engine": decision.prefill_engine,
+                          "decode_engine": decision.decode_engine,
+                          "colocated": decision.colocated,
+                          "objective": decision.objective,
+                          "value": float(decision.best.value)},
+                      "drifted_device": scaled.name}
+            advice.update(self._actuate_placement(decision))
+            return advice
         except Exception as e:             # advice must never kill the run
             return {"placement_advice": None,
                     "placement_error": repr(e)}
+
+    def _actuate_placement(self, decision) -> Dict:
+        """Turn a fresh placement decision into a mid-run engine switch.
+
+        Only possible when the two phases price on *distinct* DSE engine
+        names (otherwise the decision cannot be mapped onto the hosted
+        engines and stays advice).  If the decision's decode engine is one
+        of the hosted pair and differs from the current decode target: the
+        pipeline drains, the target flips, and in-flight decode slots
+        live-migrate (capacity-permitting)."""
+        if self._prefill_placement_name == self._decode_placement_name:
+            return {"actuated": False, "reason": "single-engine placement"}
+        target = {self._decode_placement_name: "decode",
+                  self._prefill_placement_name: "prefill"}.get(
+                      decision.decode_engine)
+        if target is None:
+            return {"actuated": False,
+                    "reason": f"decode engine {decision.decode_engine!r} "
+                              f"is not hosted"}
+        if target == self._decode_target:
+            return {"actuated": False, "decode_target": target}
+        self._drain_handoffs(force_all=True)
+        self._decode_target = target
+        moved = self._live_migrate(target)
+        if self.obs.tracer.enabled:
+            self.obs.tracer.instant(
+                "placement_actuated", track="server", cat="watchdog",
+                args={"decode_target": target, "live_migrations": moved})
+        return {"actuated": True, "decode_target": target,
+                "live_migrations": moved}
 
     def sample(self, metrics: ServeMetrics) -> None:
         # capacity-weighted across the two pools: occupancy by total_blocks,
@@ -405,41 +706,61 @@ class DisaggregatedEngineLoop:
     def scan(self, clock: Callable[[], float], metrics: ServeMetrics,
              sink: TokenSink) -> None:
         now = clock()
-        # prefill completions -> phase boundary
+        # prefill completions -> phase boundary (or in-place flip when the
+        # decode target is the prefill engine itself)
         ready_rids = {r.rid for r in self._ready}
         for s, req in enumerate(self.prefill.slots):
             if req is None or req.rid in ready_rids:
                 continue
-            req.n_fed = int(self.prefill.steps_done[s]) + req.shared_tokens
-            if self.prefill.steps_done[s] >= self.prefill.steps_total[s]:
+            base = self._fed_base.get(req.rid)
+            if base is not None:         # live-migrated decode slot here
+                req.n_fed = base + int(self.prefill.steps_done[s])
+            else:
+                req.n_fed = int(self.prefill.steps_done[s]) \
+                    + req.shared_tokens
+            if (req.state is not RequestState.DECODE
+                    and self.prefill.steps_done[s]
+                    >= self.prefill.steps_total[s]):
                 # the burst containing the first sample has been dispatched
                 req.state = RequestState.DECODE
                 req.t_first_dispatch = now
                 trace_phase_flip(self.obs.tracer, req, now)
-                self._ready.append(req)
+                if self._decode_target == "prefill":
+                    # actuated placement: the prefill engine carries the
+                    # decode phase in place (colocated step math — no
+                    # hand-off, bit-identical by construction)
+                    self.prefill.steps_total[s] += req.max_new_tokens - 1
+                else:
+                    self._ready.append(req)
+                    ready_rids.add(req.rid)
         for s, req in enumerate(self.decode.slots):
             if req is not None:
-                req.n_fed = req.prompt_len + int(self.decode.steps_done[s])
+                base = self._fed_base.get(req.rid, req.prompt_len)
+                req.n_fed = base + int(self.decode.steps_done[s])
         # streaming: burst-boundary sync per engine — the prefill engine
         # emits first samples (including parked slots), the decode engine
         # the rest of each generation
         sink.drain(self.prefill, clock)
         sink.drain(self.decode, clock)
-        # decode completions
+        # decode completions — on whichever engine carries the slot now
         tracer = self.obs.tracer
-        for s, req in enumerate(self.decode.slots):
-            if req is None:
-                continue
-            if self.decode.steps_done[s] >= self.decode.steps_total[s]:
-                h = (tracer.begin("sync", track="engine:decode",
-                                  cat="engine", args={"kind": "completion"})
-                     if tracer.enabled else None)
-                row = self.decode.pull_output(s)
-                if h is not None:
-                    tracer.end(h)
-                req.state = RequestState.DONE
-                req.t_done = clock()
-                sink.finish(req, row[:req.max_new_tokens], req.t_done)
-                self.decode.release(req)
-                metrics.observe(req)
-                trace_completion(tracer, req)
+        for eng in (self.decode, self.prefill):
+            for s, req in enumerate(eng.slots):
+                if (req is None or req.state is not RequestState.DECODE
+                        or req.rid in ready_rids):
+                    continue
+                if eng.steps_done[s] >= eng.steps_total[s]:
+                    h = (tracer.begin("sync", track=f"engine:{eng.name}",
+                                      cat="engine",
+                                      args={"kind": "completion"})
+                         if tracer.enabled else None)
+                    row = eng.pull_output(s)
+                    if h is not None:
+                        tracer.end(h)
+                    req.state = RequestState.DONE
+                    req.t_done = clock()
+                    sink.finish(req, row[:req.max_new_tokens], req.t_done)
+                    eng.release(req)
+                    self._fed_base.pop(req.rid, None)
+                    metrics.observe(req)
+                    trace_completion(tracer, req)

@@ -165,6 +165,13 @@ class SlotEngine:
     in :meth:`bind` before the slot's first write.  The engine never reads
     the host clock: burst timing is the caller's concern (injected
     clocks), and :meth:`sync` is a pure wait that cannot change outputs.
+
+    ``device`` pins the engine to one physical device: params, the KV
+    arenas and every per-slot buffer are committed there, so jitted
+    bursts run on that device and two SlotEngines on distinct devices
+    execute concurrently (the disaggregated loop's throughput win).
+    ``device=None`` keeps the legacy behaviour — everything on jax's
+    default device, nothing committed.
     """
 
     # largest scanned burst compiled; bounds compile count (power-of-two
@@ -172,11 +179,14 @@ class SlotEngine:
     MAX_BUCKET = 32
 
     def __init__(self, cfg: T.ModelConfig, params, pool: KVPool, *,
-                 kv_layout: str = "dense", name: str = "engine"):
+                 kv_layout: str = "dense", name: str = "engine",
+                 device=None):
         if kv_layout not in ("dense", "paged"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
         self.cfg = cfg
-        self.params = params
+        self.device = device
+        self.params = (params if device is None
+                       else jax.device_put(params, device))
         self.pool = pool
         self.kv_layout = kv_layout
         self.name = name                 # labels this engine's trace track
@@ -190,12 +200,18 @@ class SlotEngine:
         else:
             self.cache = T.init_slot_cache(cfg, n_slots, pool.max_seq)
             self._step_fn = T.decode_step_slots
+        if device is not None:
+            self.cache = jax.device_put(self.cache, device)
         self.max_prompt = pool.max_seq
         self.max_gen = pool.max_seq
         self._prompts = jnp.zeros((n_slots, self.max_prompt), jnp.int32)
         self._plens = jnp.zeros((n_slots,), jnp.int32)
         self._last_tok = jnp.zeros((n_slots,), jnp.int32)
         self._out_buf = jnp.zeros((n_slots, self.max_gen), jnp.int32)
+        if device is not None:
+            (self._prompts, self._plens, self._last_tok, self._out_buf) = \
+                jax.device_put((self._prompts, self._plens, self._last_tok,
+                                self._out_buf), device)
         self._burst_fns: Dict[int, Callable] = {}
         self.slots: List[Optional[Request]] = [None] * n_slots
         # host-side schedule state: active steps done / total per slot, plus
@@ -377,8 +393,14 @@ class SlotEngine:
         layout ships only the pages that actually hold written tokens
         (``kv_tokens`` of them), so the hand-off payload scales with the
         prompt, not the reservation."""
-        take_r = lambda a: a[s] if getattr(a, "ndim", 0) >= 1 else a
-        take_b = lambda a: a[:, s] if getattr(a, "ndim", 0) >= 2 else a
+        # slot-invariant entries (no slot axis) must be COPIED, not
+        # aliased: the async hand-off holds snapshots across bursts, and
+        # the burst donates the engine's buffers — an alias would be a
+        # deleted buffer by adoption time.  Slices already allocate fresh
+        # buffers; only the passthrough branches alias.
+        snap = lambda a: a.copy() if hasattr(a, "ndim") else a
+        take_r = lambda a: a[s] if getattr(a, "ndim", 0) >= 1 else snap(a)
+        take_b = lambda a: a[:, s] if getattr(a, "ndim", 0) >= 2 else snap(a)
         state = {
             "layout": self.kv_layout,
             "pos": self.cache["pos"][s],
@@ -423,6 +445,12 @@ class SlotEngine:
         sharing: the destination lease already maps them onto shared
         pages holding bit-identical content, which must not be written).
         """
+        if self.device is not None:
+            # commit the snapshot here before any at[].set — mixing arrays
+            # committed to different devices in one op is an error, and a
+            # snapshot that already finished its async device_put makes
+            # this a no-op
+            state = state_to_device(state, self.device)
         layout = state.get("layout", "dense")
         if layout != self.kv_layout:
             raise ValueError(
@@ -514,6 +542,37 @@ class SlotEngine:
         Non-array metadata (layout tag, written-token count) is free."""
         return sum(int(leaf.nbytes) for leaf in jax.tree.leaves(state)
                    if hasattr(leaf, "nbytes"))
+
+
+def state_to_device(state: Dict, device) -> Dict:
+    """Commit every array leaf of an exported slot snapshot to ``device``
+    (non-array metadata — layout tag, token counts — passes through).
+
+    ``jax.device_put`` *dispatches* the copy and returns immediately, so
+    calling this right after :meth:`SlotEngine.export_slot` starts the
+    cross-device transfer in the background: the exporting engine can keep
+    computing while the bytes drain, and the adopting engine blocks only
+    on whatever is still in flight (the async hand-off).  Re-committing an
+    array already on ``device`` is a no-op, so the defensive call inside
+    :meth:`SlotEngine.import_slot` costs nothing on the fast path."""
+    return jax.tree.map(
+        lambda x: (jax.device_put(x, device)
+                   if isinstance(x, jax.Array) else x), state)
+
+
+def snapshot_ready(state: Dict) -> bool:
+    """True when every array in a dispatched snapshot has resolved on its
+    destination device (non-blocking — the overlap probe)."""
+    return all(leaf.is_ready() for leaf in jax.tree.leaves(state)
+               if isinstance(leaf, jax.Array))
+
+
+def snapshot_wait(state: Dict) -> None:
+    """Block until a dispatched snapshot's transfer completes (the stall
+    the hand-off ledger charges to the adopting engine)."""
+    for leaf in jax.tree.leaves(state):
+        if isinstance(leaf, jax.Array):
+            leaf.block_until_ready()
 
 
 class EngineLoop:

@@ -249,6 +249,16 @@ def _measured_devices(engines: Sequence[ExecutionEngine],
     return out
 
 
+def _measured_link_bw(cache_path: Optional[str]) -> Optional[float]:
+    """The profile cache's measured inter-device copy bandwidth (bytes/s)
+    for this environment, or None when none was recorded — the measured
+    counterpart of ``transfer_cost``'s datasheet fallback."""
+    from ..profiling import ProfileCache, cached_link_bw
+    from ..profiling.cache import DEFAULT_CACHE_PATH
+    cache = ProfileCache.load(cache_path or DEFAULT_CACHE_PATH, strict=False)
+    return cached_link_bw(cache)
+
+
 def place_phases(
     cfg: ModelConfig,
     engines: Optional[Sequence[ExecutionEngine]] = None,
@@ -269,8 +279,10 @@ def place_phases(
     buildable XLA engine plus the paper boards' roofline twins).  Engines
     that cannot run one of the model's layer kinds are skipped for that
     phase.  ``price="measured"`` hooks into ``repro.profiling``: buildable
-    engines with cached measurements are priced on calibrated models.
-    ``link_bw`` overrides the hand-off bandwidth (e.g. a measured rate).
+    engines with cached measurements are priced on calibrated models, and
+    the hand-off is priced at the cache's measured inter-device copy rate
+    when one was recorded (:mod:`repro.profiling.transfer`) — an explicit
+    ``link_bw`` still wins over both.
     ``device_overrides`` maps engine name -> device model and wins over
     the measured calibration — the watchdog re-runs the DSE mid-run with
     the drifted engine's device de-rated (:func:`drift_scaled_device`).
@@ -285,6 +297,8 @@ def place_phases(
                      if price == "measured" else {})
     if device_overrides:
         overrides.update(device_overrides)
+    if link_bw is None and price == "measured":
+        link_bw = _measured_link_bw(cache_path)
 
     needed_kinds = {spec.kind
                     for spec in phase_network_spec(cfg, seq=1, kv_len=2)}

@@ -284,7 +284,9 @@ def test_handoff_ledger_is_registry_view():
     snap = reg.snapshot()
     assert snap["counters"]["handoff_bytes"] == 150
     assert led.stats() == {"n_handoffs": 2, "bytes_moved": 150,
-                           "modeled_s": 0.5, "modeled_energy_j": 3.0}
+                           "modeled_s": 0.5, "modeled_energy_j": 3.0,
+                           "stall_s": 0.0, "overlap_s": 0.0,
+                           "n_live_migrations": 0}
 
 
 def test_zero_completion_summary_is_none_not_nan():
@@ -713,3 +715,155 @@ def test_cache_measurements_source_filter():
     n = fb.flush(cache)
     assert len(cache.measurements(source="serving-telemetry")) == n
     assert cache.measurements(source="microbench") == []
+
+
+# --------------------------------------- drift-injection fuzz harness
+# Seeded random walks on the TRUE step cost, replayed through a fresh
+# watchdog: false-positive / false-negative rates and detection latency
+# are pinned as deterministic contracts across gate / alpha / warmup
+# settings (np.random.default_rng(seed) makes every walk reproducible).
+def _simulate_watchdog(seed, *, gate=1.5, alpha=0.4, warmup=4,
+                       n_bursts=60, noise=0.05, drift_at=None,
+                       drift_factor=1.0, ramp_to=None, reprice=True,
+                       steps=8, batch=4):
+    """Replay one noisy priced-vs-observed walk; returns (wd, detections).
+
+    The true per-step cost starts at the priced value, multiplied by
+    lognormal(0, noise) jitter each burst; from ``drift_at`` on it is
+    scaled by ``drift_factor`` (step change) or ramps linearly to
+    ``ramp_to`` (gradual degradation).  ``reprice`` models the control
+    loop: each alert re-prices to the observed level and re-arms, so a
+    corrected system must drift *again* to alert again.  Detections are
+    (burst index, DriftAlert) pairs.
+    """
+    from repro.obs import PerfWatchdog
+    rng = np.random.default_rng(seed)
+    wd = PerfWatchdog(drift_gate=gate, ewma_alpha=alpha, warmup=warmup)
+    base = priced = 1e-3                 # true cost drifts off the base;
+    detections = []                      # the price chases the truth
+    for i in range(n_bursts):
+        factor = 1.0
+        if drift_at is not None and i >= drift_at:
+            if ramp_to is not None:
+                frac = (i - drift_at + 1) / max(n_bursts - drift_at, 1)
+                factor = 1.0 + (ramp_to - 1.0) * frac
+            else:
+                factor = drift_factor
+        observed_step = base * factor * rng.lognormal(0.0, noise)
+        alert = wd.observe_burst("eng", "decode", n_tokens=batch,
+                                 steps=steps,
+                                 elapsed_s=observed_step * steps,
+                                 priced_step_s=priced)
+        if alert is not None:
+            detections.append((i, alert))
+            if reprice:
+                wd.note_reprice(alert, {"pricing": "fuzz"})
+                priced = observed_step   # corrected to the observed level
+    return wd, detections
+
+
+FUZZ_SEEDS = range(20)
+
+
+def test_fuzz_no_false_positives_at_default_gate():
+    # a well-priced stream under 5% lognormal noise never alerts at the
+    # default gate across 20 seeds: FP rate is exactly 0
+    for seed in FUZZ_SEEDS:
+        wd, detections = _simulate_watchdog(seed)
+        assert detections == [], f"false positive at seed {seed}"
+        assert wd.alerts == []
+
+
+def test_fuzz_tight_gate_under_heavy_noise_is_flappy():
+    # the same healthy stream with gate 1.05 under 20% noise false-alarms
+    # for most seeds — pinning WHY the default gate is 1.5, not 1.05
+    fps = sum(
+        bool(_simulate_watchdog(seed, gate=1.05, noise=0.2)[1])
+        for seed in FUZZ_SEEDS)
+    assert fps >= 10
+
+
+def test_fuzz_detects_2x_step_drift_with_bounded_latency():
+    # a 2x step change is always caught (FN rate 0) and within
+    # warmup + 6 bursts of onset at the default alpha
+    for seed in FUZZ_SEEDS:
+        wd, detections = _simulate_watchdog(seed, drift_at=20,
+                                            drift_factor=2.0)
+        assert detections, f"false negative at seed {seed}"
+        first_i, first = detections[0]
+        assert first.direction == "slow"
+        assert first.ewma_ratio > 1.5
+        assert 20 <= first_i <= 20 + 4 + 6, \
+            f"detection latency {first_i - 20} bursts at seed {seed}"
+        # the correction sticks: re-priced to observed, the stream is
+        # healthy again and the detector (re-armed) stays quiet
+        assert len(detections) == 1
+
+
+def test_fuzz_detects_inverse_drift_as_fast():
+    # priced 2.5x too high -> observed/priced ~0.4 crosses 1/gate: the
+    # alert fires in the "fast" direction (the placement-actuation case
+    # where a device is better than its price)
+    for seed in FUZZ_SEEDS:
+        _, detections = _simulate_watchdog(seed, drift_at=20,
+                                           drift_factor=0.4)
+        assert detections and detections[0][1].direction == "fast"
+
+
+def test_fuzz_detects_gradual_ramp():
+    # slow degradation (linear ramp to 3x over 40 bursts) is still caught
+    # before the run ends — EWMA drift detection is not step-change-only
+    for seed in FUZZ_SEEDS:
+        _, detections = _simulate_watchdog(seed, drift_at=20, ramp_to=3.0)
+        assert detections, f"ramp missed at seed {seed}"
+        assert detections[0][1].direction == "slow"
+
+
+def test_fuzz_warmup_orders_detection_and_uncorrected_drift_realerts():
+    # warmup gates the first alert (n_obs >= warmup at trigger), and
+    # without the re-price leg the alert stays edge-triggered: exactly
+    # one alert, not one per burst
+    for seed in FUZZ_SEEDS:
+        wd, detections = _simulate_watchdog(seed, drift_at=0,
+                                            drift_factor=4.0,
+                                            reprice=False)
+        assert len(detections) == 1
+        i, alert = detections[0]
+        assert alert.n_obs >= 4 and i + 1 >= 1 + 4   # skip_first + warmup
+        assert wd.report()["streams"]["eng/decode"]["alert_active"]
+
+
+def test_fuzz_longer_warmup_trades_latency_for_confidence():
+    # the same drifting walk detected under warmup 2 and warmup 12:
+    # both catch it (FN 0), the longer warmup never fires earlier
+    for seed in FUZZ_SEEDS:
+        _, fast = _simulate_watchdog(seed, warmup=2, drift_at=20,
+                                     drift_factor=2.0)
+        _, slow = _simulate_watchdog(seed, warmup=12, drift_at=20,
+                                     drift_factor=2.0, n_bursts=80)
+        assert fast and slow
+        assert slow[0][0] >= fast[0][0]
+
+
+def test_fuzz_low_alpha_smooths_transient_spikes():
+    # one isolated 3x spike burst (not sustained drift) at alpha 0.1
+    # never alerts across seeds; alpha 1.0 (no smoothing) always does —
+    # the EWMA is what separates transients from real drift
+    from repro.obs import PerfWatchdog
+
+    def one_spike(seed, alpha):
+        rng = np.random.default_rng(seed)
+        wd = PerfWatchdog(ewma_alpha=alpha)
+        fired = []
+        for i in range(30):
+            f = 3.0 if i == 10 else 1.0
+            step = 1e-3 * f * rng.lognormal(0.0, 0.05)
+            a = wd.observe_burst("eng", "decode", n_tokens=4, steps=8,
+                                 elapsed_s=step * 8, priced_step_s=1e-3)
+            if a is not None:
+                fired.append(a)
+        return fired
+
+    for seed in FUZZ_SEEDS:
+        assert one_spike(seed, 0.1) == []
+        assert one_spike(seed, 1.0) != []

@@ -29,7 +29,13 @@ The ``adaptive`` section closes the loop: under an injected admission
 mispricing that clamps the token budget to 1, the watchdog's mid-run
 re-pricing must recover throughput and TTFT (bit-identically — admission
 policy never changes outputs), and tracer+watchdog throughput must stay
-within the gated overhead of tracer-only.
+within the gated overhead of tracer-only.  The ``speculative`` section
+drives draft-model speculative decoding through the programmatic API
+(``repro.serving.api.serve``): a forced-depth run must stay bit-identical
+to plain decode with its accepted-token rate measured, the
+analyzer-priced run must fall back to plain serving when speculation
+prices worse at these smoke shapes, and an adversarially de-rated draft
+device must price speculation off outright.
 
 Static batching groups requests by prompt length (the legacy server is
 rectangular), waits for a full batch to arrive, and decodes every batch to
@@ -849,6 +855,95 @@ def run_multidevice(*, n_requests: int, slots: int, seed: int) -> Dict:
     return section
 
 
+def run_speculative() -> Dict:
+    """Draft-model speculative decoding through the programmatic serving
+    API (``repro.serving.api.serve``), plus the analyzer's pricing calls.
+
+    Four legs.  (1) *Forced*: the registry pairing — ``qwen2_1_5b``
+    drafting for ``granite_34b`` at smoke scale — with ``draft_k=2``;
+    greedy verification makes speculative outputs bitwise the plain
+    run's, and the measured accepted-token rate is reported.  (2)
+    *Priced*: the same pair with the depth left to the trade-off
+    analyzer; at these smoke shapes the projected draft+verify cost
+    loses to plain decode, so the gated claim is the *fallback* — the
+    run must serve plain, bit-identically, and record why.  (3)
+    *Adversarial price*: a draft device de-rated 100x must price
+    speculation off even at a 0.95 acceptance prior.  (4) The
+    full-scale registry pair's pricing table across acceptance rates
+    (informational: where speculation wins once the draft really is
+    ~20x cheaper than the target)."""
+    from repro.configs import registry
+    from repro.core.device_models import get as get_device
+    from repro.serving.api import ServeOptions, serve
+    from repro.serving.placement import (choose_speculation,
+                                         drift_scaled_device)
+
+    target, draft = "granite_34b", "qwen2_1_5b"
+    shape = dict(arch=target, requests=6, slots=4, prompt_len=8,
+                 gen_len=16, rate=1e9)
+
+    def _opts(**overrides):
+        o = ServeOptions()
+        flat = o.flat_fields()
+        for key, v in {**shape, **overrides}.items():
+            setattr(getattr(o, flat[key]), key, v)
+        o.validate()
+        return o
+
+    plain = serve(_opts())
+    forced = serve(_opts(speculate=True, draft_arch=draft, draft_k=2))
+    priced = serve(_opts(speculate=True, draft_arch=draft))
+    st = forced.speculation
+
+    tgt_cfg = registry.get(target).config
+    draft_cfg = registry.get(draft).config
+    slow_draft = drift_scaled_device(get_device("tpu-v5e"), 100.0)
+    adversarial = choose_speculation(
+        tgt_cfg, draft_cfg, kv_len=1024, n_tokens=8, acceptance=0.95,
+        draft_name=draft, draft_device=slow_draft)
+    pricing = {}
+    for alpha in (0.5, 0.8, 0.95):
+        d = choose_speculation(tgt_cfg, draft_cfg, kv_len=1024,
+                               n_tokens=8, acceptance=alpha,
+                               draft_name=draft)
+        pricing[f"acceptance_{int(alpha * 100)}"] = d.summary()
+
+    p, f, pr = plain.summary, forced.summary, priced.summary
+    section = {
+        "target": target,
+        "draft": draft,
+        "scale": "smoke",
+        "workload": shape,
+        "plain": p,
+        "forced": f,
+        "speculation": st,
+        "accepted_token_rate": st["acceptance_rate"],
+        "n_rounds": st["n_rounds"],
+        "tok_per_s_ratio_forced": f["tok_per_s"] / p["tok_per_s"],
+        "bit_identical_forced": forced.outputs == plain.outputs,
+        "priced": priced.speculation,
+        "priced_engaged": bool(priced.speculation["engaged"]),
+        "priced_fallback": bool(
+            priced.speculation.get("priced_fallback", False)),
+        "tok_per_s_ratio_priced": pr["tok_per_s"] / p["tok_per_s"],
+        "bit_identical_priced": priced.outputs == plain.outputs,
+        "adversarial": {"draft_derate_factor": 100.0, "acceptance": 0.95,
+                        "decision": adversarial.summary()},
+        "pricing_full_scale": pricing,
+    }
+    section["all_identical"] = (section["bit_identical_forced"]
+                                and section["bit_identical_priced"])
+    print(f"[bench_serving] speculative[{draft}->{target}]: forced k=2 "
+          f"{st['n_rounds']} rounds, acceptance "
+          f"{st['acceptance_rate']:.2f}, "
+          f"{section['tok_per_s_ratio_forced']:.2f}x plain tok/s; priced "
+          f"leg {'engaged' if section['priced_engaged'] else 'fell back'} "
+          f"({section['tok_per_s_ratio_priced']:.2f}x); adversarial "
+          f"use={adversarial.use}; "
+          f"bit_identical={section['all_identical']}", flush=True)
+    return section
+
+
 def run_bench(*, n_requests: int, slots: int, rates: List[float],
               seed: int = 7) -> Dict:
     cfg = SMOKE_CFG
@@ -903,6 +998,7 @@ def run_bench(*, n_requests: int, slots: int, rates: List[float],
         max_len=max_len, seed=seed)
     results["multidevice"] = run_multidevice(
         n_requests=n_requests, slots=slots, seed=seed)
+    results["speculative"] = run_speculative()
     results["max_speedup"] = max(l["speedup_tok_per_s"]
                                  for l in results["loads"])
     results["all_bit_identical"] = all(
@@ -913,7 +1009,8 @@ def run_bench(*, n_requests: int, slots: int, rates: List[float],
            results["streaming"]["all_identical"],
            results["observability"]["all_identical"],
            results["adaptive"]["all_identical"],
-           results["multidevice"]["all_identical"]])
+           results["multidevice"]["all_identical"],
+           results["speculative"]["all_identical"]])
     return results
 
 

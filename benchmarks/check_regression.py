@@ -54,6 +54,13 @@ the blocking baseline pays, distinct-device throughput must hold the
 shared-device floor, and the watchdog-actuated mid-run migration must
 complete every request with >=1 in-flight slot live-migrated.
 
+The ``speculative`` section must be present and well-formed: the
+forced-depth speculative run bit-identical to plain decode with >=1
+round and a measured accepted-token rate in [0, 1], the analyzer-priced
+run either beating plain throughput within the regression budget or
+explicitly falling back to plain decode, and the adversarially de-rated
+draft device pricing speculation off.
+
 ``--trace trace.json`` gates a Chrome trace-event file written by
 ``serve --trace`` (``--fresh`` becomes optional): strict JSON (NaN and
 Infinity literals rejected), non-empty well-formed ``traceEvents``, no
@@ -576,6 +583,99 @@ def validate_multidevice(fresh: dict, *,
     return checks
 
 
+# the speculative section: forced-depth speculative decoding must stay
+# bit-identical to plain decode with real rounds and a sane measured
+# accepted-token rate; the analyzer-priced run must either beat plain
+# throughput (within the regression budget) or have explicitly fallen
+# back to plain decode; and the adversarially de-rated draft device must
+# price speculation off
+_SPECULATIVE_NUMERIC_KEYS = ("accepted_token_rate", "n_rounds",
+                             "tok_per_s_ratio_forced",
+                             "tok_per_s_ratio_priced")
+_SPECULATIVE_BOOL_KEYS = ("bit_identical_forced", "bit_identical_priced",
+                          "priced_engaged", "priced_fallback",
+                          "all_identical")
+_SPECULATIVE_ROUND_KEYS = ("n_rounds", "n_proposed", "n_accepted",
+                           "n_committed")
+
+
+def validate_speculative(fresh: dict, *,
+                         threshold: float) -> List[Tuple[str, bool, str]]:
+    """Schema + correctness checks for the ``speculative`` section:
+    forced-depth speculation bit-identical to plain decode with >=1 round
+    and an accepted-token rate in [0, 1], the analyzer-priced run holding
+    the plain-decode throughput floor (or explicitly falling back), and
+    the adversarial draft pricing rejecting speculation."""
+    checks: List[Tuple[str, bool, str]] = []
+    section = fresh.get("speculative")
+    if not isinstance(section, dict):
+        return [("speculative section present", False,
+                 f"missing or not an object: {type(section).__name__}")]
+    problems: List[str] = []
+    for k in _SPECULATIVE_NUMERIC_KEYS:
+        if not _num(section.get(k)):
+            problems.append(f"{k}: not a finite number")
+    for k in _SPECULATIVE_BOOL_KEYS:
+        if not isinstance(section.get(k), bool):
+            problems.append(f"{k}: not a bool")
+    for run in ("plain", "forced"):
+        summ = section.get(run)
+        if not isinstance(summ, dict):
+            problems.append(f"{run}: missing summary")
+            continue
+        for k in ("tok_per_s", "tokens_out", "requests_done"):
+            if not _num(summ.get(k)):
+                problems.append(f"{run}.{k}: not a finite number")
+    spec = section.get("speculation")
+    if not isinstance(spec, dict):
+        problems.append("speculation: missing round accounting")
+    else:
+        for k in _SPECULATIVE_ROUND_KEYS:
+            if not _num(spec.get(k)):
+                problems.append(f"speculation.{k}: not a finite number")
+    adv = section.get("adversarial")
+    adv_decision = adv.get("decision") if isinstance(adv, dict) else None
+    if not (isinstance(adv_decision, dict)
+            and isinstance(adv_decision.get("use"), bool)):
+        problems.append("adversarial.decision: missing or no 'use' bool")
+    checks.append(("speculative section schema", not problems,
+                   "; ".join(problems) if problems else
+                   "plain + forced + priced runs and pricing decisions "
+                   "well-formed"))
+    if problems:
+        return checks
+    checks.append((
+        "speculative outputs bit-identical to plain decode",
+        section["all_identical"],
+        f"forced={section['bit_identical_forced']}, "
+        f"priced={section['bit_identical_priced']}"))
+    rate = section["accepted_token_rate"]
+    checks.append((
+        "speculative rounds actually ran",
+        section["n_rounds"] >= 1 and 0.0 <= rate <= 1.0,
+        f"{section['n_rounds']} rounds, "
+        f"{spec['n_accepted']}/{spec['n_proposed']} proposals accepted "
+        f"(rate {rate:.2f}), {spec['n_committed']} tokens committed"))
+    floor = 1.0 - threshold
+    priced_ok = (section["priced_fallback"]
+                 or section["tok_per_s_ratio_priced"] >= floor)
+    checks.append((
+        "priced speculation holds the plain-decode floor",
+        priced_ok,
+        (f"analyzer fell back to plain decode "
+         f"({section['tok_per_s_ratio_priced']:.2f}x plain tok/s)"
+         if section["priced_fallback"] else
+         f"engaged at {section['tok_per_s_ratio_priced']:.2f}x plain "
+         f"tok/s (floor {floor:.2f}x; forced leg "
+         f"{section['tok_per_s_ratio_forced']:.2f}x, not gated)")))
+    checks.append((
+        "adversarial draft price rejects speculation",
+        adv_decision["use"] is False,
+        f"draft device de-rated {adv['draft_derate_factor']:g}x at "
+        f"acceptance {adv['acceptance']:.2f} -> use={adv_decision['use']}"))
+    return checks
+
+
 # every request lifecycle stage a serve --trace file must cover: complete
 # ("X") spans and instant ("i") markers emitted by the obs tracer
 _TRACE_REQUIRED_SPANS = ("queued", "prefill", "decode", "burst", "sync")
@@ -734,6 +834,7 @@ def compare(baseline: dict, fresh: dict, *, threshold: float,
     checks.extend(validate_observability(fresh))
     checks.extend(validate_adaptive(fresh))
     checks.extend(validate_multidevice(fresh, threshold=threshold))
+    checks.extend(validate_speculative(fresh, threshold=threshold))
     return checks
 
 

@@ -256,3 +256,44 @@ def objective_value(cost: CostBreakdown, objective: str) -> float:
 
 
 OBJECTIVES = ("latency", "energy", "edp", "power", "perf_density")
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding (draft/verify on the decode path)
+# ---------------------------------------------------------------------------
+def expected_tokens_per_round(acceptance: float, k: int) -> float:
+    """Expected committed tokens of one speculative round at draft depth k.
+
+    With per-token acceptance rate ``alpha`` (i.i.d. across window
+    offsets, the standard speculative-decoding model), the accepted draft
+    prefix has expected length sum_{i=1..k} alpha^i and the target always
+    commits one more token of its own (the correction after a rejection,
+    the bonus after full acceptance):
+
+        E[c] = alpha (1 - alpha^k) / (1 - alpha) + 1        (alpha < 1)
+             = k + 1                                        (alpha = 1)
+    """
+    if k < 1:
+        raise ValueError(f"draft depth k must be >= 1, got {k}")
+    a = min(max(float(acceptance), 0.0), 1.0)
+    if a >= 1.0:
+        return float(k + 1)
+    return a * (1.0 - a ** k) / (1.0 - a) + 1.0
+
+
+def speculative_decode_cost(t_draft_step_s: float, t_verify_s: float,
+                            acceptance: float, k: int) -> float:
+    """Modeled wall time per *committed* token of speculative decoding.
+
+    One round runs k+1 sequential draft steps (the last writes the draft
+    KV for its own final proposal) plus one multi-position verify step on
+    the target, and commits :func:`expected_tokens_per_round` tokens:
+
+        t_spec = ((k + 1) t_draft + t_verify) / E[c]
+
+    Compare against the plain per-token time (one target step) to decide
+    whether speculation prices better — the paper's offload trade-off
+    applied to the decode hot path.
+    """
+    e = expected_tokens_per_round(acceptance, k)
+    return ((k + 1) * t_draft_step_s + t_verify_s) / e

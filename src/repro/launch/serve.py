@@ -4,6 +4,13 @@ static-batch server (``--static-batching``).
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2_1_5b \
         --scale smoke --slots 8 --requests 32 --rate 16
 
+This module is only the CLI skin: every flag maps 1:1 onto a field of
+:class:`repro.serving.api.ServeOptions` and ``main()`` does nothing but
+parse -> ``ServeOptions.from_args`` -> ``validate`` -> ``serve``.  The
+serving logic itself — engine construction, placement, speculation,
+observability exports — lives in :func:`repro.serving.api.serve`, the
+same entry point benchmarks and tests drive programmatically.
+
 Continuous path (repro.serving): an open-loop arrival stream feeds a
 slot-based KV pool; the batcher prices admission with core/cost_model.py and
 the jitted engine step interleaves prefill with the running decode batch.
@@ -19,6 +26,17 @@ the engine set and the serving loop disaggregates onto the winning pair
 Static path: requests accumulate into a batch; prefill replays the prompt
 into a max_len cache; decode emits one token per step for the whole batch —
 the queue refills only between generations (head-of-line blocking).
+
+Speculative decoding (``--speculate``): a draft model proposes k tokens
+per slot and the target verifies all k in ONE multi-position step over
+the paged KV cache, committing only the accepted prefix — greedy outputs
+stay bit-identical to plain decode.  The trade-off analyzer
+(repro.serving.placement.choose_speculation) prices draft steps + the
+verify step against plain decode at the measured-or-prior acceptance
+rate, picks the depth k, and falls back to plain decode when speculation
+prices worse; an online acceptance tracker re-prices mid-run and can
+veto a drafting model that stops earning its keep.  ``--draft-k K``
+forces depth K regardless of price (the CI/identity knob).
 
 Observability (``--trace``, ``--metrics-out``, ``--feed-cache``): the
 continuous path can record every request's lifecycle spans into a Chrome
@@ -42,66 +60,20 @@ same shardings the dry-run validates for the decode_32k / long_500k cells.
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import functools
-from typing import List
 
-import jax
-import jax.numpy as jnp
-
-from ..configs import registry
-from ..models import sharding as shard_lib
-from ..models import transformer as T
-from ..obs import Observability, TelemetryFeedback, Tracer, default_clock
-from ..obs.export import write_metrics, write_trace
-from ..serving import (DisaggregatedEngineLoop, EngineLoop, place_phases,
-                       prefix_shared_workload, synthetic_workload)
 from ..serving import placement as placement_lib
-from .mesh import device_assignment, make_host_mesh, make_production_mesh
-
-
-class Server:
-    """Legacy static-batching server (the continuous engine's baseline)."""
-
-    def __init__(self, cfg: T.ModelConfig, params, mesh, max_len: int):
-        self.cfg = cfg
-        self.params = params
-        self.mesh = mesh
-        self.max_len = max_len
-        self._decode = jax.jit(
-            lambda p, c, t: T.decode_step(p, cfg, c, t), donate_argnums=(1,))
-
-    def generate(self, prompts: jnp.ndarray, gen_len: int) -> jnp.ndarray:
-        """prompts: (B, P) int32.  Returns (B, gen_len)."""
-        b, plen = prompts.shape
-        # build a max_len cache and replay the prompt through decode steps
-        # (keeps the cache layout identical to the dry-run serve_step cells)
-        cache = T.init_cache(self.cfg, b, max_seq=self.max_len)
-        for i in range(plen):
-            step_logits, cache = self._decode(self.params, cache,
-                                              prompts[:, i:i + 1])
-        next_tok = jnp.argmax(step_logits[:, -1], axis=-1)[:, None]
-        out: List[jnp.ndarray] = [next_tok]
-        for _ in range(gen_len - 1):
-            step_logits, cache = self._decode(self.params, cache, out[-1])
-            out.append(jnp.argmax(step_logits[:, -1], axis=-1)[:, None])
-        return jnp.concatenate(out, axis=1)
-
-
-def build_params(cfg: T.ModelConfig, mesh):
-    policy = shard_lib.make_policy(cfg, mesh)
-    p_shapes = jax.eval_shape(
-        functools.partial(T.init_params, cfg=cfg), jax.random.PRNGKey(0))
-    p_sh = shard_lib.param_shardings(cfg, policy, p_shapes)
-    with mesh:
-        return jax.jit(functools.partial(T.init_params, cfg=cfg),
-                       out_shardings=p_sh)(jax.random.PRNGKey(0))
+# re-exported for compatibility: the static server and param builder grew
+# up here before the programmatic API extracted them
+from ..serving.api import (ServeOptions, ServeReport, Server,  # noqa: F401
+                           build_params, serve)
 
 
 def build_parser() -> argparse.ArgumentParser:
     """The serve CLI's argument parser (module-level so tests and the docs
     consistency gate can introspect the flag set without running a
-    server)."""
+    server).  Every dest matches a ServeOptions leaf field; flags whose
+    absence matters to validation default to None and get their effective
+    default (noted in the help) inside serve()."""
     ap = argparse.ArgumentParser(prog="repro.launch.serve",
                                  description=__doc__.splitlines()[0])
     ap.add_argument("--arch", default="qwen2_1_5b")
@@ -143,9 +115,10 @@ def build_parser() -> argparse.ArgumentParser:
                          "onto --shared-frac of the requests (the chat/"
                          "agent system-prompt pattern prefix sharing "
                          "exploits); default: fully unique prompts")
-    ap.add_argument("--shared-frac", type=float, default=0.9,
+    ap.add_argument("--shared-frac", type=float, default=None,
                     help="workload: fraction of requests carrying the "
-                         "--shared-prefix-len common prefix (default 0.9)")
+                         "--shared-prefix-len common prefix (default 0.9; "
+                         "requires --shared-prefix-len)")
     ap.add_argument("--rate", type=float, default=16.0,
                     help="continuous path: offered load (req/s)")
     ap.add_argument("--stream", action="store_true",
@@ -164,9 +137,9 @@ def build_parser() -> argparse.ArgumentParser:
                     help="price admission on a profiling-calibrated device "
                          "model fitted from this profile cache "
                          "(repro.profiling) instead of nominal constants")
-    ap.add_argument("--calibrated-engine", default="xla",
+    ap.add_argument("--calibrated-engine", default=None,
                     help="engine whose measurements to calibrate from when "
-                         "--calibrated-cache is given")
+                         "--calibrated-cache is given (default xla)")
     ap.add_argument("--placement", default="colocated",
                     choices=["colocated", "disagg", "auto"],
                     help="auto: price prefill/decode separately over the "
@@ -239,7 +212,9 @@ def build_parser() -> argparse.ArgumentParser:
                          "timings back into the profiling cache as measured "
                          "points (default path: the REPRO_PROFILE_CACHE "
                          "profile cache), so price=\"measured\" learns from "
-                         "this run's traffic")
+                         "this run's traffic; with --speculate also "
+                         "persists the measured acceptance rate the "
+                         "analyzer prices later runs on")
     ap.add_argument("--watchdog", action="store_true",
                     help="continuous path: run the online performance "
                          "watchdog — compare observed burst step times "
@@ -248,7 +223,8 @@ def build_parser() -> argparse.ArgumentParser:
                          "mid-run when the EWMA divergence crosses the gate")
     ap.add_argument("--drift-gate", type=float, default=None,
                     help="watchdog: observed/priced EWMA ratio (or its "
-                         "inverse) that raises a DriftAlert (default 1.5)")
+                         "inverse) that raises a DriftAlert (default 1.5; "
+                         "requires --watchdog)")
     ap.add_argument("--misprice", type=float, default=None, metavar="FACTOR",
                     help="debug/CI: scale the admission device model's "
                          "throughput down by FACTOR (drift_scaled_device) "
@@ -256,425 +232,57 @@ def build_parser() -> argparse.ArgumentParser:
                          "an injected mispricing the watchdog must detect "
                          "and correct (FACTOR < 1 prices too FAST, so the "
                          "drifted device looks slow and placement moves "
-                         "work off it)")
-    ap.add_argument("--misprice-phase", default="both",
+                         "work off it; requires --watchdog)")
+    ap.add_argument("--misprice-phase", default=None,
                     choices=["both", "prefill", "decode"],
                     help="--misprice scope on the disaggregated path: "
                          "misprice only one phase's device model so "
                          "exactly that stream drifts (the deterministic "
-                         "trigger for mid-run placement actuation)")
+                         "trigger for mid-run placement actuation; "
+                         "default both, requires --misprice)")
     ap.add_argument("--slo-report", action="store_true",
                     help="continuous path: print per-request-class "
                          "(short/medium/long by generation length) "
                          "TTFT/TPOT SLO attainment after the run")
-    ap.add_argument("--slo-ttft-ms", type=float, default=2000.0,
-                    help="--slo-report: time-to-first-token objective (ms)")
-    ap.add_argument("--slo-tpot-ms", type=float, default=200.0,
-                    help="--slo-report: time-per-output-token objective (ms)")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="--slo-report: time-to-first-token objective "
+                         "(ms, default 2000; requires --slo-report)")
+    ap.add_argument("--slo-tpot-ms", type=float, default=None,
+                    help="--slo-report: time-per-output-token objective "
+                         "(ms, default 200; requires --slo-report)")
+    ap.add_argument("--speculate", action="store_true",
+                    help="continuous path, paged layout: draft-model "
+                         "speculative decoding — the draft proposes k "
+                         "tokens per slot, the target verifies all k in "
+                         "one multi-position step over the paged cache "
+                         "(greedy outputs stay bit-identical to plain "
+                         "decode); the trade-off analyzer prices the "
+                         "draft and depth against plain decode at the "
+                         "measured-or-prior acceptance rate and serves "
+                         "plain when speculation prices worse")
+    ap.add_argument("--draft-arch", default=None, metavar="ARCH",
+                    help="--speculate: registry arch proposing draft "
+                         "tokens (default qwen2_1_5b; must share the "
+                         "target's vocab)")
+    ap.add_argument("--draft-k", type=int, default=None, metavar="K",
+                    help="--speculate: force draft depth K and skip the "
+                         "analyzer's engage/veto pricing (the CI and "
+                         "bit-identity knob)")
     return ap
-
-
-def _prime_curves(args, cfg, kv_len: int, batcher) -> None:
-    """--persist-curves startup leg: fit the latency(batch) curve from the
-    telemetry a previous run fed into the cache and install it as the
-    decode batcher's pricing — a restarted server prices from the last
-    run's observed curve instead of re-warming through the watchdog."""
-    if not args.persist_curves:
-        return
-    import os
-
-    from ..obs.curves import curve_points_from_cache, fit_latency_curve
-    from ..profiling.cache import ProfileCache
-    if not os.path.exists(args.persist_curves):
-        print(f"[serve] curves: {args.persist_curves} does not exist yet "
-              f"(first run warms it)", flush=True)
-        return
-    cache = ProfileCache.load(args.persist_curves, strict=False)
-    points = curve_points_from_cache(cache, cfg, kv_len=kv_len)
-    curve = fit_latency_curve(points, source="cache-curve")
-    if curve is None:
-        print(f"[serve] curves: {args.persist_curves} holds "
-              f"{len(points)} usable batch point(s) — need >= 2 for a "
-              f"curve; pricing stays analytic", flush=True)
-        return
-    detail = batcher.reprice(curve.predict, source="cache-curve")
-    print(f"[serve] curves: primed {batcher.phase} pricing from "
-          f"{args.persist_curves} (batches {list(curve.batches)}, "
-          f"token budget {detail['token_budget_old']} -> "
-          f"{detail['token_budget']})", flush=True)
 
 
 def main() -> None:
     ap = build_parser()
     args = ap.parse_args()
-    if args.placement == "auto" and (args.prefill_engine
-                                     or args.decode_engine):
-        ap.error("--placement auto chooses the engines; drop "
-                 "--prefill-engine/--decode-engine or use --placement disagg")
-    if args.stream and args.static_batching:
-        ap.error("--stream needs the continuous engine (the static server "
-                 "only surfaces tokens at batch end)")
-    if args.static_batching and (args.trace or args.metrics_out
-                                 or args.feed_cache or args.watchdog
-                                 or args.slo_report):
-        ap.error("--trace/--metrics-out/--feed-cache/--watchdog/--slo-report "
-                 "instrument the continuous engine; drop --static-batching")
-    if args.misprice is not None and args.misprice <= 0:
-        ap.error("--misprice must be > 0")
-    if args.static_batching and (args.device_assignment != "single"
-                                 or args.sync_handoff or args.persist_curves
-                                 or args.measure_link_bw):
-        ap.error("--device-assignment/--sync-handoff/--persist-curves/"
-                 "--measure-link-bw drive the continuous engine; drop "
-                 "--static-batching")
-    if args.prefix_sharing and args.kv_layout == "dense":
-        ap.error("--prefix-sharing maps physical KV pages; it requires "
-                 "--kv-layout paged")
-    if args.prefix_sharing and args.static_batching:
-        ap.error("--prefix-sharing needs the continuous engine's KV pool")
-    if args.shared_prefix_len is not None and args.shared_prefix_len <= 0:
-        ap.error("--shared-prefix-len must be > 0")
-
-    arch = registry.get(args.arch)
-    cfg = arch.smoke if args.scale == "smoke" else arch.config
-    assert cfg is not None and not cfg.encoder_decoder \
-        and cfg.frontend == "none", "serve CLI supports decoder-only LMs"
-    cfg = dataclasses.replace(cfg, scan_chunk=min(cfg.scan_chunk, 16))
-    if args.kv_layout == "paged" and cfg.attn_window is not None:
-        # the paged arena has no rolling-buffer mode yet (ROADMAP follow-on)
-        print(f"[serve] {args.arch} uses sliding-window attention "
-              f"(window={cfg.attn_window}); paged KV layout does not "
-              f"support rolling buffers yet — falling back to dense",
-              flush=True)
-        args.kv_layout = "dense"
-    if args.prefix_sharing:
-        if args.kv_layout != "paged":
-            raise SystemExit(f"[serve] --prefix-sharing requires the paged "
-                             f"KV layout, but {args.arch} fell back to "
-                             f"dense (sliding-window attention)")
-        if any(t != "attn" for t in cfg.layer_types()):
-            raise SystemExit(f"[serve] --prefix-sharing requires an all-"
-                             f"attention config; {args.arch} mixes layer "
-                             f"types {sorted(set(cfg.layer_types()))} "
-                             f"(recurrent/cross state is slot-local)")
-
-    mesh = (make_host_mesh() if args.mesh == "host" else
-            make_production_mesh(multi_pod=args.mesh == "multipod"))
-    params = build_params(cfg, mesh)
-    max_len = args.prompt_len + args.gen_len
-
-    if args.static_batching:
-        server = Server(cfg, params, mesh, max_len=max_len)
-        rng = jax.random.PRNGKey(1)
-        done = 0
-        # monotonic clock (shared with the serving loops' timing): wall
-        # clock steps under NTP and must not measure intervals
-        t0 = default_clock()
-        while done < args.requests:
-            n = min(args.batch, args.requests - done)
-            rng, k = jax.random.split(rng)
-            prompts = jax.random.randint(k, (n, args.prompt_len), 0,
-                                         cfg.vocab)
-            with mesh:
-                toks = server.generate(prompts, args.gen_len)
-            toks.block_until_ready()
-            done += n
-            print(f"[serve] batch of {n}: generated {toks.shape} "
-                  f"first row: {toks[0, :8].tolist()}", flush=True)
-        dt = default_clock() - t0
-        total_toks = args.requests * args.gen_len
-        print(f"served {args.requests} requests, {total_toks} tokens in "
-              f"{dt:.1f}s ({total_toks / dt:.1f} tok/s)")
-        return
-
-    # continuous batching: mixed-length open-loop traffic.  With
-    # --shared-prefix-len the stream front-loads one common prefix onto
-    # --shared-frac of the requests (prompts grow by the prefix, so the
-    # pool's max_seq grows with them)
-    gen_lens = (max(args.gen_len // 8, 1), max(args.gen_len // 2, 1),
-                args.gen_len)
-    if args.shared_prefix_len is not None:
-        requests = prefix_shared_workload(
-            args.requests, rate=args.rate, vocab=cfg.vocab,
-            shared_prefix_len=args.shared_prefix_len,
-            shared_frac=args.shared_frac,
-            suffix_lens=(max(args.prompt_len // 2, 1), args.prompt_len),
-            gen_lens=gen_lens, seed=1)
-        max_len += args.shared_prefix_len
-    else:
-        requests = synthetic_workload(
-            args.requests, rate=args.rate, vocab=cfg.vocab,
-            prompt_lens=(max(args.prompt_len // 2, 1), args.prompt_len),
-            gen_lens=gen_lens, seed=1)
-    device_model = None
-    if args.calibrated_cache is not None:
-        import os
-
-        from ..core.engines import ENGINES_BY_NAME
-        from ..profiling import Measurement, ProfileCache, calibrate_engine
-        if not os.path.exists(args.calibrated_cache):
-            raise SystemExit(
-                f"[serve] --calibrated-cache {args.calibrated_cache}: no "
-                f"such file (run `python -m repro.launch.profile` first)")
-        cache = ProfileCache.load(args.calibrated_cache)
-        eng = ENGINES_BY_NAME[args.calibrated_engine]
-        ms = [Measurement.from_dict(d)
-              for d in cache.measurements(engine=eng.name)]
-        if not ms:
-            n_stale = len(cache.measurements(engine=eng.name, stale=True))
-            raise SystemExit(
-                f"[serve] {args.calibrated_cache} has no measurements for "
-                f"engine {eng.name} under this environment "
-                f"({n_stale} from other jax versions/backends; re-profile "
-                f"here or pass a matching cache)")
-        device_model = calibrate_engine(eng, ms, register=True)
-        print(f"[serve] admission priced on {device_model.name} "
-              f"({device_model.n_measurements} measurements, kinds "
-              f"{sorted(device_model.throughput)}; other kinds fall back to "
-              f"{device_model.base_efficiency:.2f} x peak)")
-
-    # phase placement: which engine's device model prices each phase
-    from ..core.engines import ENGINES_BY_NAME
-
-    def _engine(name: str):
-        if name not in ENGINES_BY_NAME:
-            raise SystemExit(f"[serve] unknown engine {name!r} (choose from "
-                             f"{', '.join(sorted(ENGINES_BY_NAME))})")
-        return ENGINES_BY_NAME[name]
-
-    on_delta = None
-    if args.stream:
-        def on_delta(d):
-            toks = ",".join(str(t) for t in d.tokens)
-            tag = " [done]" if d.done else ""
-            print(f"[stream] t={d.t:8.3f}s rid={d.rid:>4} "
-                  f"+{len(d.tokens)} [{toks}]{tag}", flush=True)
-
-    step_slo_s = None if args.step_slo_ms is None else args.step_slo_ms / 1e3
-
-    # device topology: pin the two phase engines onto distinct devices
-    # (degrades gracefully to one device when only one is visible)
-    assignment = None
-    if args.device_assignment == "auto":
-        assignment = device_assignment()
-        print(f"[serve] device assignment: {assignment.summary()}",
-              flush=True)
-
-    # measured inter-device link bandwidth: an actual device_put of a
-    # representative page batch, persisted environment-keyed in the
-    # profile cache so place_phases(price="measured") prices hand-offs
-    # from it on later runs too
-    measured_link_bw = None
-    if args.measure_link_bw:
-        from ..profiling import record_link_bw
-        from ..profiling.cache import DEFAULT_CACHE_PATH, ProfileCache
-        link_cache_path = (DEFAULT_CACHE_PATH
-                           if args.measure_link_bw is True
-                           else args.measure_link_bw)
-        devs = assignment if assignment is not None else device_assignment()
-        link_cache = ProfileCache.load(link_cache_path, strict=False)
-        m = record_link_bw(link_cache, devs.prefill, devs.decode)
-        link_cache.save(link_cache_path)
-        measured_link_bw = m["link_bw"]
-        print(f"[serve] link {m['src']} -> {m['dst']}: "
-              f"{measured_link_bw / 1e9:.2f} GB/s "
-              f"({m['n_bytes']} bytes in {m['t_median'] * 1e3:.3f} ms) "
-              f"-> {link_cache_path}", flush=True)
-    handoff_link_bw = (args.handoff_link_bw if args.handoff_link_bw
-                       is not None else measured_link_bw)
-    # one observability bundle for whichever loop runs: tracing only when
-    # asked (NullTracer otherwise — near-zero cost), registry always (it
-    # backs the hand-off ledger and the metrics dump), feedback only with
-    # --feed-cache (it syncs each decode burst to time it)
-    watchdog = None
-    if args.watchdog:
-        from ..obs import PerfWatchdog
-        watchdog = (PerfWatchdog() if args.drift_gate is None
-                    else PerfWatchdog(drift_gate=args.drift_gate))
-    obs = Observability(
-        tracer=Tracer() if args.trace else None,
-        feedback=(TelemetryFeedback(cfg, kv_len=max_len)
-                  if args.feed_cache or args.persist_curves else None),
-        watchdog=watchdog)
-
-    def _misprice(dev, phase=None):
-        """Inject an admission-pricing error for watchdog CI/debug runs.
-        ``--misprice-phase`` scopes it to one phase's device model so
-        exactly that stream drifts (the placement-actuation trigger)."""
-        if args.misprice is None:
-            return dev
-        if (phase is not None and args.misprice_phase != "both"
-                and args.misprice_phase != phase):
-            return dev
-        from ..core import device_models
-        from ..serving.placement import drift_scaled_device
-        if dev is None:
-            dev = device_models.get(args.device_model)
-        return drift_scaled_device(dev, args.misprice)
-
-    pre_eng = dec_eng = None
-    if args.placement == "auto":
-        decision = place_phases(
-            cfg, objective=args.placement_objective,
-            prompt_len=args.prompt_len, gen_len=args.gen_len,
-            batch=args.slots,
-            price="measured" if args.calibrated_cache else "analytic",
-            cache_path=args.calibrated_cache)
-        print(f"[serve] {decision.summary()}", flush=True)
-        pre_eng = ENGINES_BY_NAME[decision.prefill_engine]
-        dec_eng = ENGINES_BY_NAME[decision.decode_engine]
-    elif args.placement == "disagg" or args.prefill_engine or args.decode_engine:
-        pre_eng = _engine(args.prefill_engine or "xla")
-        dec_eng = _engine(args.decode_engine or "xla")
-        for eng, phase in ((pre_eng, "prefill"), (dec_eng, "decode")):
-            try:
-                c = placement_lib.phase_cost(
-                    cfg, eng, phase, prompt_len=args.prompt_len,
-                    gen_len=args.gen_len, batch=args.slots)
-            except ValueError as e:      # cost-only CNN engine, LM model
-                raise SystemExit(f"[serve] {e}")
-            print(f"[serve] {phase} on {eng.name}: modeled "
-                  f"{c.time_s*1e3:.3f}ms, {c.energy_j:.4f}J", flush=True)
-
-    def _phase_device(eng):
-        """Calibrated model when the cache covers this engine, else its own."""
-        if device_model is not None and eng.name == args.calibrated_engine:
-            return device_model
-        return eng.device
-
-    # auto placement only disaggregates when the analyzer says the split
-    # wins; an explicit --placement disagg always runs the two-engine loop
-    # (same-engine disagg measures the bare phase-boundary overhead)
-    if pre_eng is not None and (args.placement == "disagg"
-                                or pre_eng.name != dec_eng.name):
-        engine = DisaggregatedEngineLoop(
-            cfg, params, n_prefill_slots=args.prefill_slots or args.slots,
-            n_decode_slots=args.slots, max_seq=max_len,
-            kv_layout=args.kv_layout,
-            decode_total_blocks=args.total_blocks,
-            prefix_sharing=args.prefix_sharing,
-            prefill_device=_misprice(_phase_device(pre_eng), "prefill"),
-            decode_device=_misprice(_phase_device(dec_eng), "decode"),
-            step_slo_s=step_slo_s, obs=obs,
-            handoff_link_bw=handoff_link_bw,
-            assignment=assignment,
-            async_handoff=not args.sync_handoff,
-            placement_engine_name=dec_eng.name,
-            prefill_placement_engine_name=pre_eng.name,
-            decode_placement_engine_name=dec_eng.name)
-        _prime_curves(args, cfg, max_len, engine.decode_batcher)
-        with mesh:
-            metrics = engine.run(requests, on_delta=on_delta)
-        for b in engine.batchers:
-            print(f"[serve] {b.phase} token budget {b.token_budget}/"
-                  f"{b.pool.n_slots} slots (device model {b.device_name})")
-        pools = (("prefill", engine.prefill.pool),
-                 ("decode", engine.decode.pool))
-        batchers = engine.batchers
-        for k, v in engine.handoff.stats().items():
-            val = f"{v:.4f}" if isinstance(v, float) else str(v)
-            print(f"[serve] handoff.{k:>17}: {val}", flush=True)
-        print(f"[serve] decode target: {engine.decode_target} engine "
-              f"({'async' if not args.sync_handoff else 'sync'} hand-off)",
-              flush=True)
-    else:
-        if pre_eng is not None:          # colocated by choice of placement
-            device_model = _phase_device(pre_eng)
-        engine = EngineLoop(
-            cfg, params, n_slots=args.slots, max_seq=max_len,
-            kv_layout=args.kv_layout, total_blocks=args.total_blocks,
-            prefix_sharing=args.prefix_sharing,
-            device_name=args.device_model,
-            device_model=_misprice(device_model),
-            step_slo_s=step_slo_s, obs=obs)
-        _prime_curves(args, cfg, max_len, engine.batcher)
-        with mesh:
-            metrics = engine.run(requests, on_delta=on_delta)
-        print(f"[serve] token budget {engine.batcher.token_budget}/"
-              f"{args.slots} slots (device model "
-              f"{engine.batcher.device_name})")
-        pools = (("", engine.pool),)
-        batchers = (engine.batcher,)
-    for k, v in metrics.summary().items():
-        val = f"{v:.4f}" if isinstance(v, float) else str(v)
-        print(f"[serve] {k:>22}: {val}", flush=True)
-    # KV-pool ledger + admission accounting (end-of-run state of the block
-    # ledger, plus what the batcher did to the queue over the whole run)
-    for tag, pool in pools:
-        prefix = f"kv_pool{'.' + tag if tag else ''}"
-        for k, v in pool.stats().items():
-            val = f"{v:.4f}" if isinstance(v, float) else str(v)
-            print(f"[serve] {prefix}.{k:>15}: {val}", flush=True)
-    for b in batchers:
-        tag = f" [{b.phase}]" if len(batchers) > 1 else ""
-        print(f"[serve] admission{tag}: {b.n_admitted} admitted, "
-              f"{b.n_rejected} rejected (deadline/oversize), "
-              f"{b.n_deferred} deferrals (budget or pool pressure)",
-              flush=True)
-
-    # ---- watchdog + SLO reporting ----------------------------------------
-    if watchdog is not None:
-        rep = watchdog.report()
-        print(f"[serve] watchdog: {len(rep['alerts'])} drift alerts, "
-              f"{len(rep['reprices'])} re-price events, sync cadence "
-              f"{rep['sync_cadence']}", flush=True)
-        for a in rep["alerts"]:
-            print(f"[serve] watchdog.alert: {a['engine']}/{a['phase']} "
-                  f"{a['direction']} ewma={a['ewma_ratio']:.2f} "
-                  f"(priced {a['priced_step_s']*1e3:.2f}ms, observed "
-                  f"{a['observed_step_s']*1e3:.2f}ms)", flush=True)
-        for r in rep["reprices"]:
-            print(f"[serve] watchdog.reprice: {r['engine']}/{r['phase']} "
-                  f"pricing={r.get('pricing')} token_budget "
-                  f"{r.get('token_budget_old')} -> {r.get('token_budget')}",
-                  flush=True)
-        for b in batchers:
-            if b.n_reprices:
-                print(f"[serve] admission [{b.phase}] re-priced "
-                      f"{b.n_reprices}x ({b.price_source}); final budget "
-                      f"{b.token_budget}/{b.pool.n_slots}", flush=True)
-    if args.slo_report:
-        from ..obs.watchdog import format_slo_report, slo_attainment
-        rows = slo_attainment(requests, ttft_slo_s=args.slo_ttft_ms / 1e3,
-                              tpot_slo_s=args.slo_tpot_ms / 1e3)
-        print(format_slo_report(rows, ttft_slo_s=args.slo_ttft_ms / 1e3,
-                                tpot_slo_s=args.slo_tpot_ms / 1e3),
-              flush=True)
-
-    # ---- observability exports -------------------------------------------
-    if args.trace:
-        path = write_trace(obs.tracer, args.trace)
-        print(f"[serve] trace: {len(obs.tracer.events)} events "
-              f"({obs.tracer.n_dropped} dropped, {obs.tracer.n_open} "
-              f"unclosed) -> {path}", flush=True)
-    if args.metrics_out:
-        extra = {"summary": metrics.summary()}
-        if watchdog is not None:
-            extra["watchdog"] = watchdog.report()
-        path = write_metrics(obs.registry, args.metrics_out,
-                             tracer=obs.tracer if args.trace else None,
-                             extra=extra)
-        print(f"[serve] metrics snapshot -> {path}", flush=True)
-    if args.feed_cache:
-        from ..profiling.cache import DEFAULT_CACHE_PATH, ProfileCache
-        cache_path = (DEFAULT_CACHE_PATH if args.feed_cache is True
-                      else args.feed_cache)
-        cache = ProfileCache.load(cache_path, strict=False)
-        n = obs.feedback.flush(cache)
-        cache.save(cache_path)
-        print(f"[serve] fed {n} telemetry measurements from "
-              f"{obs.feedback.n_bursts} bursts (batch sizes "
-              f"{obs.feedback.batches}) -> {cache_path}", flush=True)
-    if args.persist_curves:
-        # --persist-curves exit leg: flush this run's burst telemetry so
-        # the next serve's _prime_curves finds a fresh curve
-        from ..profiling.cache import ProfileCache
-        cache = ProfileCache.load(args.persist_curves, strict=False)
-        n = obs.feedback.flush(cache)
-        cache.save(args.persist_curves)
-        print(f"[serve] curves: persisted {n} telemetry measurements "
-              f"(batch sizes {obs.feedback.batches}) -> "
-              f"{args.persist_curves}", flush=True)
+    options = ServeOptions.from_args(args)
+    try:
+        options.validate()
+    except ValueError as err:
+        ap.error(str(err))
+    try:
+        serve(options, verbose=True)
+    except ValueError as err:
+        raise SystemExit(f"[serve] {err}")
 
 
 if __name__ == "__main__":

@@ -274,6 +274,54 @@ def paged_decode_attention(q, k_arena, v_arena, block_tables, pos, *,
     return decode_attention(q, k, v, pos=pos, window=None)
 
 
+def decode_attention_multi(q, k_cache, v_cache, *, pos: jax.Array
+                           ) -> jax.Array:
+    """M-token verification attention against a cache.
+
+    q: (B, HQ, M, D); caches: (B, HK, T, D).  ``pos`` is a (B,) vector of
+    per-slot absolute positions of the FIRST query token: query m of slot b
+    sits at position pos[b] + m and attends over cache slots <= pos[b] + m
+    (the cache must already hold the window's K/V at positions
+    pos..pos+M-1).  This is :func:`decode_attention` with a query axis —
+    speculative verification feeds the k drafted tokens plus the committed
+    chain head in one step instead of k+1 sequential single-token steps.
+    Windowed layers are unsupported: the rolling buffer's write-back
+    overlaps itself inside one multi-token window.
+    """
+    b, hq, m, d = q.shape
+    hk, t = k_cache.shape[1], k_cache.shape[2]
+    qg = _gqa_fold(q, hk)                                    # (B,HK,G,M,D)
+    scale = 1.0 / (d ** 0.5)
+    # same no-upcast discipline as decode_attention (see the comment there)
+    logits = jnp.einsum("bkgmd,bktd->bkgmt", qg.astype(k_cache.dtype),
+                        k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    slots = jnp.arange(t)
+    qpos = jnp.asarray(pos)[:, None] + jnp.arange(m)         # (B, M)
+    valid = slots[None, None] <= qpos[:, :, None]            # (B, M, T)
+    logits = jnp.where(valid[:, None, None], logits, _NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgmt,bktd->bkgmd", probs.astype(v_cache.dtype),
+                     v_cache, preferred_element_type=jnp.float32)
+    return out.reshape(b, hq, m, d).astype(q.dtype)
+
+
+def paged_decode_attention_multi(q, k_arena, v_arena, block_tables, pos, *,
+                                 max_seq: int) -> jax.Array:
+    """M-token verification attention against a block-paged cache.
+
+    Shapes as :func:`paged_decode_attention` with q: (B, HQ, M, D).  Only
+    the reference gather path exists: verification reuses the serving
+    engine's bit-identity contract (gathered rows equal dense rows at
+    every attended position), and a fused multi-query Pallas kernel is a
+    follow-on once speculation runs on a real TPU.
+    """
+    from ..kernels.ref import paged_gather
+    k = paged_gather(k_arena, block_tables, max_seq)
+    v = paged_gather(v_arena, block_tables, max_seq)
+    return decode_attention_multi(q, k, v, pos=pos)
+
+
 ATTENTION_ENGINES = {
     "dot": dot_attention,
     "chunked": chunked_attention,

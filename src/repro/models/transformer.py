@@ -550,7 +550,8 @@ def _decode_block(btype, p, x, cache, cfg: ModelConfig, pos, cross_feats):
 
 def _decode_step_impl(params, cfg: ModelConfig, cache: Dict,
                       tokens: jax.Array, active: Optional[jax.Array], *,
-                      block_step=None, arena_passthrough: bool = False):
+                      block_step=None, arena_passthrough: bool = False,
+                      pos_increment: int = 1):
     """Shared decode-step body.  With ``active=None`` this is the static
     path (scalar `pos`, whole batch advances); with an (B,) ``active`` mask
     it is the continuous-batching path (per-slot (B,) `pos`, inactive slots
@@ -618,8 +619,8 @@ def _decode_step_impl(params, cfg: ModelConfig, cache: Dict,
     # survive; the dense cache carries exactly layers/pos/cross either way
     new_cache = dict(cache)
     new_cache["layers"] = (new_blocks, tuple(new_rem))
-    new_cache["pos"] = (pos + 1 if active is None
-                        else jnp.where(active, pos + 1, pos))
+    new_cache["pos"] = (pos + pos_increment if active is None
+                        else jnp.where(active, pos + pos_increment, pos))
     return logits, new_cache
 
 
@@ -816,6 +817,93 @@ def decode_step_slots_paged(params, cfg: ModelConfig, cache: Dict,
 
     return _decode_step_impl(params, cfg, cache, tokens, active,
                              block_step=block_step, arena_passthrough=True)
+
+
+def _multi_attn_block_paged(p, x, cache, cfg: ModelConfig, pos,
+                            cross_feats, block_tables, active, max_seq):
+    """Verification-window counterpart of `_decode_attn_block_paged`: x is
+    (B, M, d) — M consecutive tokens per slot at positions pos..pos+M-1 —
+    whose K/V is scattered into the slot's pages in one shot, and each
+    query attends over cache slots <= its own position (the freshly
+    written window prefix included, exactly as M sequential single-token
+    steps would see it).  Inactive slots' writes route to the trash page;
+    their offsets collide across slots there, which is harmless — the
+    trash page is never attended."""
+    h_in = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _project_qkv(p["attn"], h_in, cfg)             # (B,H,M,hd)
+    pos_a = jnp.asarray(pos)
+    assert pos_a.ndim == 1, "paged decode is per-slot (continuous batching)"
+    b, m = x.shape[0], x.shape[1]
+    wpos = pos_a[:, None] + jnp.arange(m)                    # (B, M)
+    posq = wpos[:, None, :]
+    q = apply_rope(q, posq, cfg.rope_theta)
+    k = apply_rope(k, posq, cfg.rope_theta)
+
+    bs = cache["k"].shape[-2]
+    nb = block_tables.shape[1]
+    trash = cache["k"].shape[0] - 1
+    j = jnp.clip(wpos // bs, 0, nb - 1)
+    off = wpos % bs
+    phys = jnp.take_along_axis(block_tables, j, axis=1)      # (B, M)
+    phys = jnp.where(active[:, None], phys, trash)
+    heads = jnp.arange(cfg.n_kv_heads)[None, None, :]
+    # window positions are distinct per slot and slots own disjoint pages,
+    # so the M-way scatter has no live-page collisions
+    k_arena = cache["k"].at[phys[:, :, None], heads, off[:, :, None]].set(
+        k.transpose(0, 2, 1, 3).astype(cache["k"].dtype))
+    v_arena = cache["v"].at[phys[:, :, None], heads, off[:, :, None]].set(
+        v.transpose(0, 2, 1, 3).astype(cache["v"].dtype))
+
+    out = attn_lib.paged_decode_attention_multi(
+        q, k_arena, v_arena, block_tables, pos_a, max_seq=max_seq)
+    x = x + _merge_heads(out, p["attn"], cfg)
+    if "xattn" in p and cross_feats is not None:
+        x = x + _cross_attention(p, x, cross_feats, cfg)
+    x = _mlp(p, x, cfg)
+    return x, {"k": k_arena, "v": v_arena}
+
+
+def decode_multi_step_slots_paged(params, cfg: ModelConfig, cache: Dict,
+                                  tokens: jax.Array, active: jax.Array, *,
+                                  max_seq: int, advance: bool = True):
+    """M-token engine step over independent slots on the block-paged cache.
+
+    tokens: (B, M) int32 — M *consecutive* chain tokens per slot starting
+    at ``cache["pos"]`` — against the same cache contract as
+    :func:`decode_step_slots_paged`.  Returns (logits (B, M, V), cache):
+    logits[:, i] conditions on tokens[:, :i+1], so feeding the committed
+    head plus k drafted tokens yields the target's greedy continuation at
+    every window offset in ONE step — speculative verification — and
+    feeding a prompt chunk replays prefill M tokens at a time (draft
+    enrollment).
+
+    ``advance`` (static): True moves each active slot's position by M (the
+    enrollment/replay feed); False leaves ``pos`` untouched so the caller
+    can commit only the accepted prefix (speculative verify).  Positions
+    pos+c..pos+M-1 then hold *stale* K/V from the rejected tail — safe
+    because every later feed starts at the committed position and rewrites
+    forward before attention ever reaches them (attention masks
+    kv_slot <= query position).
+
+    Requires an all-attention config: recurrent/SSM state advances
+    token-serially and has no slot-local multi-token step.
+    """
+    if any(t != "attn" for t in cfg.layer_types()):
+        raise ValueError(
+            "multi-token slot step requires an all-attention config: "
+            "recurrent/SSM layer state has no multi-token slot step")
+    pos = cache["pos"]
+    cross_feats = cache.get("cross")
+    block_tables = cache["block_tables"]
+
+    def block_step(btype, p, h, c):
+        return _multi_attn_block_paged(p, h, c, cfg, pos, cross_feats,
+                                       block_tables, active, max_seq)
+
+    return _decode_step_impl(
+        params, cfg, cache, tokens, active, block_step=block_step,
+        arena_passthrough=True,
+        pos_increment=tokens.shape[1] if advance else 0)
 
 
 # ---------------------------------------------------------------------------

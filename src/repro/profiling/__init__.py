@@ -16,6 +16,8 @@ behaviour; this package is that measurement layer for the reproduction:
 CLI: ``python -m repro.launch.profile`` (measure + calibrate + compare
 plans); benchmark: ``python -m benchmarks.bench_profiling``.
 """
+from .acceptance import (ACCEPTANCE_ENGINE, ACCEPTANCE_SOURCE,
+                         cached_acceptance, record_acceptance)
 from .bench import Measurement, make_input, profile_network, time_layer
 from .cache import (DEFAULT_CACHE_PATH, ProfileCache, entry_key, environment,
                     fingerprint, validate_dict)
@@ -27,10 +29,12 @@ from .transfer import (LINK_ENGINE, LINK_SOURCE, cached_link_bw,
                        measure_link_bandwidth, record_link_bw)
 
 __all__ = [
-    "CalibratedDeviceModel", "CalibrationReport", "DEFAULT_CACHE_PATH",
+    "ACCEPTANCE_ENGINE", "ACCEPTANCE_SOURCE", "CalibratedDeviceModel",
+    "CalibrationReport", "DEFAULT_CACHE_PATH",
     "LINK_ENGINE", "LINK_SOURCE", "LayerPrediction", "Measurement",
     "MeasuredPricer", "ProfileCache", "analytic_predicted_time",
-    "cached_link_bw", "calibrate_engine", "calibration_report",
+    "cached_acceptance", "cached_link_bw", "calibrate_engine",
+    "calibration_report", "record_acceptance",
     "entry_key", "environment", "fingerprint", "fit_kind_rates",
     "make_input", "measure_link_bandwidth", "profile_network",
     "record_link_bw", "time_layer", "validate_dict",

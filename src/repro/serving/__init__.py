@@ -6,7 +6,11 @@ streaming output channel (`driver` — both loops instantiate it; streamed
 deltas are bit-identical to completion pulls), and phase-disaggregated
 serving — prefill and decode placed on separate engines by the trade-off
 analyzer (`placement`), with an explicitly-priced KV hand-off
-(`disagg`)."""
+(`disagg`), draft-model speculative decoding priced by the same analyzer
+(`speculative`), and the typed programmatic entry point
+(`api.serve(ServeOptions) -> ServeReport`) the CLI, benchmarks, and
+tests all drive."""
+from .api import ServeOptions, ServeReport, serve
 from .batcher import (ContinuousBatcher, decode_network_spec,
                       phase_network_spec, step_time_model,
                       token_budget_for_slo)
@@ -15,18 +19,23 @@ from .driver import (OpenLoopDriver, ServeMetrics, StreamDelta, TokenSink,
                      sample_pools)
 from .engine_loop import EngineLoop, SlotEngine
 from .kv_pool import KVPool
-from .placement import (PhaseCost, PlacementDecision, handoff_payload_bytes,
+from .placement import (PhaseCost, PlacementDecision, SpeculationDecision,
+                        choose_speculation, handoff_payload_bytes,
                         phase_cost, place_phases, prefill_network_spec)
 from .request import (Request, RequestState, prefix_shared_workload,
                       synthetic_workload)
+from .speculative import (SpecPlan, SpeculativeDecoder,
+                          SpeculativeEngineLoop, validate_speculation)
 
 __all__ = [
     "ContinuousBatcher", "DisaggregatedEngineLoop", "EngineLoop",
     "HandoffLedger", "KVPool", "OpenLoopDriver", "PhaseCost",
     "PlacementDecision", "Request", "RequestState", "ServeMetrics",
-    "SlotEngine", "StreamDelta", "TokenSink", "decode_network_spec",
-    "handoff_payload_bytes", "phase_cost", "phase_network_spec",
-    "place_phases", "prefill_network_spec", "prefix_shared_workload",
-    "sample_pools", "step_time_model", "synthetic_workload",
-    "token_budget_for_slo",
+    "ServeOptions", "ServeReport", "SlotEngine", "SpecPlan",
+    "SpeculationDecision", "SpeculativeDecoder", "SpeculativeEngineLoop",
+    "StreamDelta", "TokenSink", "choose_speculation",
+    "decode_network_spec", "handoff_payload_bytes", "phase_cost",
+    "phase_network_spec", "place_phases", "prefill_network_spec",
+    "prefix_shared_workload", "sample_pools", "serve", "step_time_model",
+    "synthetic_workload", "token_budget_for_slo", "validate_speculation",
 ]

@@ -57,6 +57,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Optional
 
+import numpy as np
+
 from ..core import device_models
 from ..core.cost_model import transfer_cost
 from ..launch.mesh import DeviceAssignment
@@ -70,6 +72,7 @@ from .engine_loop import (SlotEngine, snapshot_ready, snapshot_wait,
                           trace_phase_flip, wire_pool_events)
 from .kv_pool import KVPool
 from .request import Request, RequestState
+from .speculative import SpecPlan, SpeculativeDecoder, spec_dispatch
 
 # double-buffering bound: at most this many dispatched-but-unadopted
 # hand-offs ride in flight before the next dispatch blocks on the oldest
@@ -202,6 +205,8 @@ class DisaggregatedEngineLoop:
                  assignment: Optional[DeviceAssignment] = None,
                  async_handoff: bool = True,
                  prefix_sharing: bool = False,
+                 plan: Optional[SpecPlan] = None,
+                 propose_override: Optional[Callable] = None,
                  obs: Optional[Observability] = None):
         if prefix_sharing:
             if kv_layout != "paged":
@@ -247,6 +252,14 @@ class DisaggregatedEngineLoop:
         self._decode_dev = (decode_device
                             or device_models.get(decode_device_name))
         self._handoff_link_bw = handoff_link_bw
+        # speculative decoding rides the decode engine only (prefill has
+        # no decode-phase slots); while speculating, placement actuation
+        # and live migration are disabled — the draft engine's cache is
+        # pinned to the decode engine and a mid-round migration would
+        # orphan it
+        self.spec = (SpeculativeDecoder(self.decode, plan,
+                                        propose_override=propose_override)
+                     if plan is not None else None)
         # the DSE candidates the in-process SlotEngines actually execute
         # on; the watchdog's mid-run placement re-run de-rates the drifted
         # phase's engine.  With one shared name the decision stays advice;
@@ -359,6 +372,11 @@ class DisaggregatedEngineLoop:
         req = ph.req
         self.decode.adopt(req, ph.state, steps_total=ph.steps_total,
                           skip_blocks=ph.skip_blocks)
+        if self.spec is not None:
+            # fresh draft mirror for the adopted slot; the draft replays
+            # the committed chain from the imported prompt/output buffers
+            # at its first speculative round
+            self.spec.reset_slot(req.slot)
         # carry the KV-write accounting into the decode pool's ledger
         # (the lease already counts its shared tokens as written)
         self.decode.pool.note_write(
@@ -553,6 +571,19 @@ class DisaggregatedEngineLoop:
             mask = eng.active & (eng.steps_done < eng.steps_total)
             if not mask.any():
                 continue
+            if (eng is self.decode and self.spec is not None
+                    and self.spec.enabled):
+                rem = eng.steps_total - eng.steps_done
+                if (rem[mask] >= self.spec.plan.k).all():
+                    # every burstable decode slot clears the page-lease
+                    # gate: one speculative round instead of a plain burst
+                    plens = np.array([0 if r is None else r.prompt_len
+                                      for r in eng.slots], np.int64)
+                    n += spec_dispatch(
+                        self.spec, eng, eng.pool, batcher, self.obs,
+                        mask=mask, pos=plens + eng.steps_done, rem=rem,
+                        budget=None if budget is None else budget - n)
+                    continue
             remaining = (eng.steps_total - eng.steps_done)[mask]
             burst = burst_size(
                 int(remaining.min()), throttle=throttle,
@@ -674,6 +705,9 @@ class DisaggregatedEngineLoop:
         of the hosted pair and differs from the current decode target: the
         pipeline drains, the target flips, and in-flight decode slots
         live-migrate (capacity-permitting)."""
+        if self.spec is not None:
+            return {"actuated": False,
+                    "reason": "speculative decoding pins the decode engine"}
         if self._prefill_placement_name == self._decode_placement_name:
             return {"actuated": False, "reason": "single-engine placement"}
         target = {self._decode_placement_name: "decode",

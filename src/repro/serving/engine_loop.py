@@ -673,6 +673,7 @@ class EngineLoop:
                              + req.max_new_tokens - 1))
         trace_admission(self.obs, self.batcher, decision,
                         self.engine.n_active)
+        return decision
 
     def dispatch(self, throttle: bool, budget: Optional[int]) -> int:
         # burst: dispatch steps to the next completion boundary without

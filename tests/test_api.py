@@ -1,0 +1,162 @@
+"""The programmatic serving API: options construction/validation and
+end-to-end `repro.serving.api.serve()` runs (the ISSUE's requirement that
+at least one suite drives serving through the API, not the CLI).
+
+Validation is the no-op-flag audit: every flag interaction the runtime
+would silently ignore must raise instead.
+"""
+import argparse
+import dataclasses
+
+import pytest
+
+from repro.launch.serve import build_parser
+from repro.serving.api import (EFFECTIVE_DEFAULTS, ServeOptions, serve)
+
+
+def _opts(**overrides) -> ServeOptions:
+    """ServeOptions with leaf fields set by flat name."""
+    o = ServeOptions()
+    groups = o.flat_fields()
+    for name, value in overrides.items():
+        setattr(getattr(o, groups[name]), name, value)
+    return o
+
+
+# ---------------------------------------------------------------------
+# options tree <-> argparse
+# ---------------------------------------------------------------------
+def test_from_args_roundtrip():
+    args = build_parser().parse_args(
+        ["--arch", "granite_34b", "--requests", "5", "--rate", "3.5",
+         "--placement", "disagg", "--sync-handoff", "--slots", "6",
+         "--speculate", "--draft-arch", "qwen2_1_5b", "--draft-k", "3"])
+    o = ServeOptions.from_args(args)
+    assert o.workload.arch == "granite_34b"
+    assert o.workload.requests == 5
+    assert o.workload.rate == 3.5
+    assert o.engine.slots == 6
+    assert o.placement.placement == "disagg"
+    assert o.placement.sync_handoff is True
+    assert o.speculative.speculate is True
+    assert o.speculative.draft_arch == "qwen2_1_5b"
+    assert o.speculative.draft_k == 3
+    o.validate()
+
+
+def test_parser_defaults_are_valid():
+    """A bare `python -m repro.launch.serve` must validate."""
+    ServeOptions.from_args(build_parser().parse_args([])).validate()
+
+
+def test_flat_fields_unique_and_grouped():
+    flat = ServeOptions.flat_fields()
+    assert flat["arch"] == "workload"
+    assert flat["kv_layout"] == "engine"
+    assert flat["draft_k"] == "speculative"
+    # every group contributes at least one leaf
+    assert set(flat.values()) == {g for g, _ in ServeOptions.groups()}
+
+
+def test_effective_defaults_cover_every_none_default_with_one():
+    """Options whose parser default is None *because* validation needs to
+    see absence, but which have a real runtime default, must map to it."""
+    for name in ("shared_frac", "calibrated_engine", "misprice_phase",
+                 "slo_ttft_ms", "slo_tpot_ms", "draft_arch"):
+        assert name in EFFECTIVE_DEFAULTS
+
+
+# ---------------------------------------------------------------------
+# validation: silently-no-op interactions raise
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("overrides,match", [
+    ({"placement": "auto", "prefill_engine": "xla"}, "placement auto"),
+    ({"stream": True, "static_batching": True}, "continuous engine"),
+    ({"static_batching": True, "watchdog": True}, "static-batching"),
+    ({"static_batching": True, "trace": "/tmp/t.json"}, "static-batching"),
+    ({"static_batching": True, "sync_handoff": True,
+      "placement": "disagg"}, "static-batching"),
+    ({"prefix_sharing": True, "kv_layout": "dense"}, "paged"),
+    ({"prefix_sharing": True, "static_batching": True}, "KV pool"),
+    ({"shared_prefix_len": 0}, "shared-prefix-len"),
+    ({"shared_frac": 0.5}, "shared-frac"),
+    ({"misprice": 0.0, "watchdog": True}, "misprice"),
+    ({"misprice_phase": "decode", "watchdog": True}, "misprice-phase"),
+    ({"misprice": 2.0}, "watchdog"),
+    ({"drift_gate": 1.2}, "watchdog"),
+    ({"slo_ttft_ms": 100.0}, "slo-report"),
+    ({"slo_tpot_ms": 10.0}, "slo-report"),
+    ({"calibrated_engine": "xla"}, "calibrated-cache"),
+    ({"sync_handoff": True}, "disagg"),
+    ({"prefill_slots": 4}, "disagg"),
+    ({"handoff_link_bw": 1e9}, "disagg"),
+    ({"speculate": True, "static_batching": True}, "static-batching"),
+    ({"speculate": True, "prefix_sharing": True}, "prefix-sharing"),
+    ({"speculate": True, "kv_layout": "dense"}, "paged"),
+    ({"draft_arch": "qwen2_1_5b"}, "speculate"),
+    ({"draft_k": 2}, "speculate"),
+    ({"speculate": True, "draft_k": 0}, "draft-k"),
+])
+def test_validate_raises(overrides, match):
+    with pytest.raises(ValueError, match=match):
+        _opts(**overrides).validate()
+
+
+def test_cli_rejects_invalid_combination():
+    """main()'s parse path turns validation errors into argparse errors."""
+    ap = build_parser()
+    args = ap.parse_args(["--shared-frac", "0.5"])
+    with pytest.raises(ValueError):
+        ServeOptions.from_args(args).validate()
+
+
+def test_validate_accepts_consistent_options():
+    _opts(shared_prefix_len=16, shared_frac=0.5).validate()
+    _opts(watchdog=True, misprice=4.0, misprice_phase="decode").validate()
+    _opts(slo_report=True, slo_ttft_ms=100.0).validate()
+    _opts(placement="disagg", sync_handoff=True,
+          prefill_slots=4).validate()
+    _opts(speculate=True, draft_arch="qwen2_1_5b", draft_k=2).validate()
+
+
+# ---------------------------------------------------------------------
+# end-to-end through serve()
+# ---------------------------------------------------------------------
+def _serve_opts(**overrides) -> ServeOptions:
+    base = dict(arch="qwen2_1_5b", requests=4, prompt_len=4, gen_len=8,
+                rate=1e9, slots=2)
+    base.update(overrides)
+    return _opts(**base)
+
+
+def test_serve_continuous_smoke():
+    report = serve(_serve_opts())
+    assert report.summary["tokens_out"] > 0
+    assert len(report.requests) == 4
+    assert all(len(out) > 0 for out in report.outputs.values())
+    assert report.pool_stats["kv_pool"]["slots_in_use"] == 0
+    assert report.admission[0]["n_admitted"] == 4
+    assert report.speculation is None
+    assert report.handoff is None
+
+
+def test_serve_static_smoke():
+    report = serve(_serve_opts(static_batching=True, batch=2))
+    assert report.summary["static_batching"] is True
+    assert report.summary["tokens"] == 4 * 8
+    assert report.static_tokens and report.metrics is None
+
+
+def test_serve_speculative_forced_bit_identical():
+    """The API's speculative path (self-draft, forced depth) produces
+    bitwise the plain path's outputs and reports the round accounting."""
+    plain = serve(_serve_opts(gen_len=16, slots=4, requests=6))
+    spec = serve(_serve_opts(gen_len=16, slots=4, requests=6,
+                             speculate=True, draft_arch="qwen2_1_5b",
+                             draft_k=2))
+    assert spec.outputs == plain.outputs
+    st = spec.speculation
+    assert st["engaged"] and st["forced"] and st["k"] == 2
+    assert st["n_rounds"] > 0
+    # self-draft: the draft IS the target, so everything is accepted
+    assert st["acceptance_rate"] == 1.0

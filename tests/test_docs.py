@@ -68,6 +68,20 @@ def test_no_phantom_flags_documented(prog):
     assert not phantom, f"docs/cli.md documents nonexistent flags: {phantom}"
 
 
+def test_serve_options_match_serve_flags():
+    """The programmatic API and the serve CLI stay 1:1: every ServeOptions
+    leaf field has exactly one --flag and vice versa (rename or add on one
+    side only and this fails)."""
+    from repro.serving.api import ServeOptions
+    flag_names = {f[2:].replace("-", "_")
+                  for f in _flags(serve_cli.build_parser)}
+    field_names = set(ServeOptions.flat_fields())
+    assert flag_names == field_names, (
+        f"serve CLI flags and ServeOptions fields diverged — "
+        f"only flags: {sorted(flag_names - field_names)}, "
+        f"only fields: {sorted(field_names - flag_names)}")
+
+
 def test_every_package_in_module_map():
     text = (DOCS / "architecture.md").read_text(encoding="utf-8")
     packages = sorted(p.parent.name

@@ -1,0 +1,344 @@
+"""Speculative decoding: multi-position verify bitwise identity, the
+colocated and disaggregated serving loops' bit-identity to plain decode
+across accept/reject boundaries, paged-pool conservation under rollback,
+the trade-off analyzer's acceptance-rate pricing (including the
+adversarial fall-back to plain decode), and the online acceptance veto.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cost_model import (expected_tokens_per_round,
+                                   speculative_decode_cost)
+from repro.core.device_models import get as get_device
+from repro.models import transformer as T
+from repro.obs.watchdog import AcceptanceTracker
+from repro.serving import (DisaggregatedEngineLoop, EngineLoop, SpecPlan,
+                           SpeculativeEngineLoop, choose_speculation,
+                           synthetic_workload, validate_speculation)
+from repro.serving.placement import drift_scaled_device
+
+TGT = T.ModelConfig(name="spec-tgt", n_layers=3, d_model=32, n_heads=4,
+                    n_kv_heads=2, d_ff=64, vocab=64, attention_impl="dot",
+                    remat=False)
+DRAFT = T.ModelConfig(name="spec-draft", n_layers=2, d_model=24, n_heads=4,
+                      n_kv_heads=2, d_ff=48, vocab=64, attention_impl="dot",
+                      remat=False)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return T.init_params(jax.random.PRNGKey(0), TGT)
+
+
+@pytest.fixture(scope="module")
+def dparams():
+    return T.init_params(jax.random.PRNGKey(7), DRAFT)
+
+
+def _clock():
+    t = [0.0]
+
+    def now():
+        t[0] += 1e-3
+        return t[0]
+
+    return now
+
+
+def _workload(seed=3, rate=1e9, n=9):
+    return synthetic_workload(n, rate=rate, vocab=TGT.vocab,
+                              prompt_lens=(5, 9), gen_lens=(4, 7, 13),
+                              seed=seed)
+
+
+def _run_colocated(params, *, plan=None, override=None, seed=3):
+    reqs = _workload(seed=seed)
+    kw = dict(n_slots=4, max_seq=32, block_size=8, kv_layout="paged")
+    if plan is not None:
+        loop = SpeculativeEngineLoop(TGT, params, plan=plan,
+                                     propose_override=override, **kw)
+    else:
+        loop = EngineLoop(TGT, params, **kw)
+    metrics = loop.run(reqs, now_fn=_clock())
+    return {r.rid: list(r.output) for r in reqs}, metrics, loop
+
+
+@pytest.fixture(scope="module")
+def plain_outputs(params):
+    outs, _, _ = _run_colocated(params)
+    return outs
+
+
+# ---------------------------------------------------------------------
+# multi-position decode step == sequential single steps, bitwise
+# ---------------------------------------------------------------------
+def test_multi_step_bitwise_equals_sequential(params):
+    B, MAX, BSZ, M = 3, 24, 8, 4
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, TGT.vocab, size=(B, 12)).astype(np.int32)
+    active = jnp.asarray(np.array([True, True, False]))
+
+    def fresh():
+        c = T.init_slot_cache_paged(TGT, B, MAX, block_size=BSZ)
+        bps = c["block_tables"].shape[1]
+        c = dict(c)
+        c["block_tables"] = jnp.asarray(
+            np.arange(B * bps, dtype=np.int32).reshape(B, bps))
+        return c
+
+    c1, c2 = fresh(), fresh()
+    for i in range(5):
+        t = jnp.asarray(toks[:, i:i + 1])
+        _, c1 = T.decode_step_slots_paged(params, TGT, c1, t, active,
+                                          max_seq=MAX)
+        _, c2 = T.decode_step_slots_paged(params, TGT, c2, t, active,
+                                          max_seq=MAX)
+
+    singles = []
+    for i in range(5, 5 + M):
+        lg, c1 = T.decode_step_slots_paged(
+            params, TGT, c1, jnp.asarray(toks[:, i:i + 1]), active,
+            max_seq=MAX)
+        singles.append(lg[:, 0])
+    single_logits = np.asarray(jnp.stack(singles, axis=1))
+
+    multi_logits, c2 = T.decode_multi_step_slots_paged(
+        params, TGT, c2, jnp.asarray(toks[:, 5:5 + M]), active,
+        max_seq=MAX, advance=True)
+    assert (np.asarray(multi_logits) == single_logits).all(), \
+        "multi-position verify step must be BITWISE identical to " \
+        "sequential decode steps — speculation's identity contract"
+    assert (np.asarray(c1["pos"]) == np.asarray(c2["pos"])).all()
+
+    # every live page of the KV arena matches too (the trash page —
+    # index total_blocks, masked inactive slots write there and
+    # attention never reads it — is the only page allowed to differ)
+    a1 = [np.asarray(x) for x in jax.tree.leaves(c1["layers"])]
+    a2 = [np.asarray(x) for x in jax.tree.leaves(c2["layers"])]
+    assert all((x[:, :-1] == y[:, :-1]).all() for x, y in zip(a1, a2))
+
+    # the serving path always runs jitted — same bits there
+    jm = jax.jit(lambda p, c, t, a: T.decode_multi_step_slots_paged(
+        p, TGT, c, t, a, max_seq=MAX, advance=True))
+    c3 = fresh()
+    for i in range(5):
+        _, c3 = T.decode_step_slots_paged(
+            params, TGT, c3, jnp.asarray(toks[:, i:i + 1]), active,
+            max_seq=MAX)
+    ml2, _ = jm(params, c3, jnp.asarray(toks[:, 5:5 + M]), active)
+    assert (np.asarray(ml2) == single_logits).all()
+
+
+# ---------------------------------------------------------------------
+# serving bit-identity: speculative == plain, colocated
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("k", [1, 2, 3, 4])
+def test_colocated_identity_all_depths(params, dparams, plain_outputs, k):
+    plan = SpecPlan(draft_cfg=DRAFT, draft_params=dparams, k=k)
+    outs, _, loop = _run_colocated(params, plan=plan)
+    assert outs == plain_outputs
+    st = loop.spec.stats()
+    assert st["n_rounds"] > 0, "speculation never engaged"
+    assert st["n_committed"] >= st["n_rounds"], \
+        "every round commits at least the target's own token"
+
+
+def test_self_draft_full_acceptance(params, plain_outputs):
+    """Target drafting for itself accepts every proposal (alpha == 1)."""
+    plan = SpecPlan(draft_cfg=TGT, draft_params=params, k=3)
+    outs, _, loop = _run_colocated(params, plan=plan)
+    assert outs == plain_outputs
+    assert loop.spec.acceptance_rate == 1.0
+
+
+@pytest.mark.parametrize("offset", [0, 1, 3])
+def test_rejection_at_window_offset(params, plain_outputs, offset):
+    """Corrupt the (otherwise perfect) self-draft's proposal at one
+    window offset: rejection lands exactly there — first, middle, and
+    last draft token — and outputs stay identical."""
+
+    def corrupt(round_idx, proposals):
+        p = proposals.copy()
+        if offset < p.shape[1]:
+            p[:, offset] = (p[:, offset] + 1) % TGT.vocab
+        return p
+
+    plan = SpecPlan(draft_cfg=TGT, draft_params=params, k=4)
+    outs, _, loop = _run_colocated(params, plan=plan, override=corrupt)
+    assert outs == plain_outputs
+    # acceptance == accepted prefix of length `offset` every round
+    assert loop.spec.acceptance_rate == pytest.approx(offset / 4)
+
+
+def test_rollback_conserves_paged_pool(params, dparams):
+    """Rejected verify windows must not leak or corrupt pages: after a
+    speculative run the pool's ledger drains to empty, exactly like the
+    plain run — rollback is a position move, never an alloc/free."""
+    plan = SpecPlan(draft_cfg=DRAFT, draft_params=dparams, k=3)
+    _, _, loop = _run_colocated(params, plan=plan)
+    stats = loop.pool.stats()
+    assert stats["slots_in_use"] == 0
+    assert stats["blocks_in_use"] == 0
+    assert stats["peak_slots_in_use"] > 0
+
+
+# ---------------------------------------------------------------------
+# disaggregated: speculation on the decode engine, hand-offs in flight
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("k,rate", [(1, 1e9), (2, 1e9), (2, 700.0),
+                                    (3, 700.0)])
+def test_disagg_identity_with_handoffs(params, dparams, plain_outputs, k,
+                                       rate):
+    reqs = _workload(rate=rate)
+    loop = DisaggregatedEngineLoop(
+        TGT, params, n_prefill_slots=4, n_decode_slots=4, max_seq=32,
+        block_size=8,
+        plan=SpecPlan(draft_cfg=DRAFT, draft_params=dparams, k=k))
+    loop.run(reqs, now_fn=_clock())
+    outs = {r.rid: list(r.output) for r in reqs}
+    assert outs == plain_outputs
+    assert loop.spec.stats()["n_rounds"] > 0
+    assert loop.handoff.n_handoffs == len(reqs), \
+        "every request crosses the phase hand-off exactly once"
+
+
+def test_disagg_speculation_pins_actuation(params, dparams):
+    """Speculation pins the decode engine: mid-run placement actuation
+    must refuse rather than migrate the draft state."""
+    loop = DisaggregatedEngineLoop(
+        TGT, params, n_prefill_slots=4, n_decode_slots=4, max_seq=32,
+        block_size=8,
+        plan=SpecPlan(draft_cfg=DRAFT, draft_params=dparams, k=2))
+    detail = loop._actuate_placement(decision=None)
+    assert detail["actuated"] is False
+    assert "speculative" in detail["reason"]
+
+
+# ---------------------------------------------------------------------
+# pricing: the trade-off analyzer's engage / fall-back decision
+# ---------------------------------------------------------------------
+def test_expected_tokens_per_round_bounds():
+    assert expected_tokens_per_round(0.0, 4) == 1.0
+    assert expected_tokens_per_round(1.0, 4) == 5.0
+    # alpha=0.5, k=2: 0.5 + 0.25 + 1 = 1.75
+    assert expected_tokens_per_round(0.5, 2) == pytest.approx(1.75)
+    with pytest.raises(ValueError):
+        expected_tokens_per_round(0.5, 0)
+
+
+def test_speculative_cost_monotone_in_acceptance():
+    lo = speculative_decode_cost(1e-4, 1e-3, 0.1, 3)
+    hi = speculative_decode_cost(1e-4, 1e-3, 0.9, 3)
+    assert hi < lo, "higher acceptance must price cheaper per token"
+
+
+def _registry_pair():
+    from repro.configs import registry
+    return (registry.get("granite_34b").config,
+            registry.get("qwen2_1_5b").config)
+
+
+def test_choose_speculation_engages_cheap_draft():
+    """The ISSUE pairing — a 1.5B draft for a 34B target — prices better
+    than plain decode at realistic acceptance and the analyzer picks a
+    depth from the candidate set."""
+    tgt, draft = _registry_pair()
+    d = choose_speculation(tgt, draft, kv_len=1024, n_tokens=8,
+                           acceptance=0.9, draft_name="qwen2_1_5b")
+    assert d.use
+    assert d.k in (1, 2, 3, 4)
+    assert d.spec_step_s < d.plain_step_s
+    assert d.projected_speedup > 1.0
+    s = d.summary()
+    assert s["use"] and s["draft"] == "qwen2_1_5b" and len(s["table"]) == 4
+
+
+def test_choose_speculation_adversarial_draft_price():
+    """Price the draft's device 100x slower: even at 95% acceptance the
+    analyzer must refuse speculation — the demonstrable fall-back."""
+    tgt, draft = _registry_pair()
+    slow = drift_scaled_device(get_device("tpu-v5e"), 100.0)
+    d = choose_speculation(tgt, draft, kv_len=1024, n_tokens=8,
+                           acceptance=0.95, draft_device=slow)
+    assert not d.use, "a draft that costs more than the target must " \
+                      "price speculation out"
+    assert d.projected_speedup < 1.0
+
+
+def test_choose_speculation_zero_acceptance_falls_back():
+    tgt, draft = _registry_pair()
+    d = choose_speculation(tgt, draft, kv_len=1024, n_tokens=8,
+                           acceptance=0.0)
+    assert not d.use
+
+
+# ---------------------------------------------------------------------
+# online veto: measured acceptance re-prices speculation off mid-run
+# ---------------------------------------------------------------------
+def test_acceptance_tracker_vetoes_on_redecision():
+    decisions = []
+
+    def decide(alpha):
+        d = choose_speculation(TGT, DRAFT, kv_len=64, n_tokens=8,
+                               acceptance=alpha)
+        decisions.append((alpha, d.use))
+        return d
+
+    tr = AcceptanceTracker(warmup=2, redecide_every=2, decide=decide)
+    for _ in range(6):
+        tr.observe_round(8, 0)            # nothing ever accepted
+    assert tr.disabled
+    assert decisions and not decisions[-1][1]
+    rep = tr.report()
+    assert rep["disabled"] and rep["decisions"][-1]["use"] is False
+    assert rep["acceptance_ewma"] == 0.0
+
+
+def test_midrun_veto_keeps_outputs_identical(params, dparams,
+                                             plain_outputs):
+    """A tracker that vetoes after warmup disables speculation mid-run;
+    the remaining tokens decode plain and outputs stay bit-identical."""
+
+    class _Veto:
+        use = False
+
+    tracker = AcceptanceTracker(warmup=2, redecide_every=2,
+                                decide=lambda alpha: _Veto())
+    plan = SpecPlan(draft_cfg=DRAFT, draft_params=dparams, k=2,
+                    tracker=tracker)
+    outs, _, loop = _run_colocated(params, plan=plan)
+    assert outs == plain_outputs
+    assert loop.spec.disabled_midrun
+    assert not loop.spec.enabled
+    # the loop re-priced admission back to the plain analytic model
+    assert loop.batcher.price_source == "speculation-disabled"
+
+
+# ---------------------------------------------------------------------
+# configuration guards
+# ---------------------------------------------------------------------
+def test_validate_speculation_rejects_bad_configs():
+    with pytest.raises(ValueError, match="paged"):
+        validate_speculation(TGT, DRAFT, kv_layout="dense",
+                             prefix_sharing=False)
+    with pytest.raises(ValueError, match="prefix sharing"):
+        validate_speculation(TGT, DRAFT, kv_layout="paged",
+                             prefix_sharing=True)
+    other_vocab = T.ModelConfig(
+        name="v128", n_layers=2, d_model=24, n_heads=4, n_kv_heads=2,
+        d_ff=48, vocab=128, attention_impl="dot", remat=False)
+    with pytest.raises(ValueError, match="vocab"):
+        validate_speculation(TGT, other_vocab, kv_layout="paged",
+                             prefix_sharing=False)
+
+
+def test_multi_step_rejects_non_attention(params):
+    hybrid = T.ModelConfig(
+        name="hybrid", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+        d_ff=64, vocab=64, attention_impl="dot", remat=False,
+        block_pattern=("attn", "rec"))
+    with pytest.raises(ValueError):
+        validate_speculation(TGT, hybrid, kv_layout="paged",
+                             prefix_sharing=False)
